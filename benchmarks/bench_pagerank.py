@@ -1,0 +1,72 @@
+"""Fig. 2 — PR-push vs PR-pull: runtime, read I/O, I/O requests, messages.
+
+Paper claims (Twitter, 42M vertices): push cuts read I/O ~1.8x, runtime
+~2.2x, and I/O *requests* ~5x.  Here the workload is RMAT with the same
+degree skew; the claim reproduced is the *direction and shape* of each gap
+(push strictly cheaper on every I/O axis, with requests the biggest win).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.algs import pagerank_inmem, pagerank_pull, pagerank_push
+from repro.core import EDGE_RECORD_BYTES
+
+from .common import bench_graph, row, sem_graph, timeit
+
+__all__ = ["run"]
+
+
+SSD_BW = 2e9  # B/s — FlashGraph-class SSD array
+SSD_REQ = 20e-6  # s per coalesced SAFS request
+
+
+def _io_time(io) -> float:
+    """Modeled SEM runtime on the paper's hardware: the SSD array serves
+    ``records`` bytes and ``requests`` coalesced reads.  The CPU container
+    has no SSD in the loop, so wall-clock here measures compute, not the
+    I/O the paper's Fig. 2 runtime is dominated by; this model restores the
+    paper's regime from the *measured* I/O counters."""
+    return int(io.records) * EDGE_RECORD_BYTES / SSD_BW + int(io.requests) * SSD_REQ
+
+
+def run(quick: bool = True) -> list:
+    scale = 12 if quick else 13
+    tol = 1e-4
+    g = bench_graph(scale)
+    sg = sem_graph(g, chunk_size=4096)
+    rows = []
+
+    pull = jax.jit(lambda: pagerank_pull(sg, tol=tol))
+    push = jax.jit(lambda: pagerank_push(sg, tol=tol))
+    (r_pull, io_pull, it_pull), t_pull = timeit(pull, repeats=2)
+    (r_push, io_push, it_push), t_push = timeit(push, repeats=2)
+
+    # correctness: same fixed point
+    err = float(np.max(np.abs(np.asarray(r_pull) - np.asarray(r_push))))
+    assert err < 10 * tol / g.n * g.n, f"push/pull fixed points diverge: {err}"
+
+    for name, io, t, iters in (
+        ("pull", io_pull, t_pull, it_pull),
+        ("push", io_push, t_push, it_push),
+    ):
+        rows += [
+            row("pagerank", name, "runtime_s", t),
+            row("pagerank", name, "io_time_model_s", _io_time(io)),
+            row("pagerank", name, "read_MB", int(io.records) * EDGE_RECORD_BYTES / 1e6),
+            row("pagerank", name, "io_requests", int(io.requests)),
+            row("pagerank", name, "messages", int(io.messages)),
+            row("pagerank", name, "supersteps", int(iters)),
+        ]
+    rows += [
+        row("pagerank", "push_over_pull", "read_reduction_x",
+            int(io_pull.records) / max(int(io_push.records), 1)),
+        row("pagerank", "push_over_pull", "request_reduction_x",
+            int(io_pull.requests) / max(int(io_push.requests), 1)),
+        row("pagerank", "push_over_pull", "io_time_speedup_x",
+            _io_time(io_pull) / _io_time(io_push)),
+        row("pagerank", "push_over_pull", "runtime_speedup_x", t_pull / t_push),
+        row("pagerank", "push_over_pull", "fixed_point_maxerr", err),
+    ]
+    return rows

@@ -1,0 +1,63 @@
+"""Shared benchmark utilities: graphs, timing, result rows."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.core import device_graph
+from repro.graph.generators import rmat
+
+__all__ = ["bench_graph", "sem_graph", "timeit", "row", "print_rows"]
+
+_CACHE: dict = {}
+
+
+def bench_graph(scale: int = 10, edge_factor: int = 16, symmetrize: bool = False):
+    """The benchmark workload: RMAT with Twitter-like skew (cached)."""
+    key = (scale, edge_factor, symmetrize)
+    if key not in _CACHE:
+        _CACHE[key] = rmat(scale, edge_factor, seed=42, symmetrize=symmetrize)
+    return _CACHE[key]
+
+
+def sem_graph(g, chunk_size: int = 4096):
+    key = ("sem", id(g), chunk_size)
+    if key not in _CACHE:
+        _CACHE[key] = device_graph(g, chunk_size=chunk_size)
+    return _CACHE[key]
+
+
+def timeit(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> tuple:
+    """(result, best_seconds) with jit warmup + block_until_ready."""
+    out = None
+    for _ in range(warmup):
+        out = fn()
+        jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def row(bench: str, variant: str, metric: str, value) -> dict:
+    return {
+        "bench": bench,
+        "variant": variant,
+        "metric": metric,
+        "value": float(value),
+    }
+
+
+def print_rows(rows: list, file=None) -> None:
+    for r in rows:
+        print(
+            f"{r['bench']},{r['variant']},{r['metric']},{r['value']:.6g}",
+            file=file,
+            flush=True,
+        )

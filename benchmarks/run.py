@@ -1,0 +1,119 @@
+"""Benchmark driver: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]``
+
+Emits ``bench,variant,metric,value`` CSV rows, then a claims-validation
+summary comparing measured ratios against the direction/shape of the
+paper's figures (exact magnitudes depend on the workload; the paper used
+the 1.5B-edge Twitter graph on an SSD array, we use RMAT with matched skew
+and count the same I/O events).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+from .common import print_rows
+
+BENCHES = [
+    "bench_pagerank",
+    "bench_coreness",
+    "bench_diameter",
+    "bench_bc",
+    "bench_triangles",
+    "bench_louvain",
+    "bench_sem_vs_inmem",
+    "bench_kernels",
+]
+
+# (bench, variant, metric, predicate, paper reference).  Magnitude targets
+# are scaled to the bench workload (RMAT at laptop scale vs the paper's
+# 1.5B-edge Twitter on an SSD array); EXPERIMENTS.md §Benchmarks discusses
+# each gap.  Direction must always match the paper.
+CLAIMS = [
+    ("pagerank", "push_over_pull", "read_reduction_x", lambda v: v > 1.2,
+     "Fig.2: push reads less than pull (paper: 1.8x)"),
+    ("pagerank", "push_over_pull", "request_reduction_x", lambda v: v > 1.3,
+     "Fig.2: push issues fewer I/O requests (paper: ~5x)"),
+    ("pagerank", "push_over_pull", "io_time_speedup_x", lambda v: v > 1.2,
+     "Fig.2: push faster on the paper's SSD-bound runtime (paper: 2.2x)"),
+    ("coreness", "prune_over_unopt", "superstep_reduction_x", lambda v: v > 8.0,
+     "Fig.3: k-pruning collapses supersteps (paper: ~10x alone)"),
+    ("coreness", "hybrid_over_prune", "read_reduction_x", lambda v: v > 1.5,
+     "Fig.3: hybrid messaging cuts bytes further (paper: 2.3x)"),
+    ("diameter", "multi_over_uni", "superstep_reduction_x", lambda v: v > 4.0,
+     "Fig.5: multi-source BFS slashes global barriers"),
+    ("diameter", "multi_over_uni", "read_reduction_x", lambda v: v > 2.0,
+     "Fig.5: multi-source reuses fetched chunks"),
+    ("bc", "multi_over_uni", "read_reduction_x", lambda v: v > 2.0,
+     "Fig.6: multi-source BC moves less data (paper: 4x @32 sources)"),
+    ("bc", "fused", "shared_chunk_fetches", lambda v: v > 0,
+     "Fig.6a: fused phases share fetches (cache-hit ratio rises)"),
+    ("triangles", "hash", "speedup_comparisons_x", lambda v: v > 8.0,
+     "Fig.7: full optimization ladder (paper: ~2 orders of magnitude)"),
+    ("triangles", "restarted", "speedup_comparisons_x", lambda v: v > 2.0,
+     "Fig.7: restarted binary search beats scan intersection"),
+    ("louvain", "graphyti", "bytes_written_MB", lambda v: v == 0.0,
+     "Fig.8: Graphyti path writes no edge data"),
+    ("sem_vs_inmem", "sem", "fraction_of_inmem", lambda v: v > 0.6,
+     "Abstract: SEM ~80% of in-memory performance"),
+    ("sem_vs_inmem", "sem", "memory_reduction_x", lambda v: v > 4.0,
+     "Abstract: memory cut ~(m/n)x (paper: 20-100x on Twitter)"),
+    ("spmv_kernel", "local_0.05", "tile_skip_ratio", lambda v: v > 0.5,
+     "Kernel: frontier block skipping elides most tile DMAs"),
+    ("decode_attn_kernel", "window_256_vs_full", "fetch_reduction_x",
+     lambda v: v > 4.0,
+     "Kernel: window decode skips out-of-window KV blocks (P1 on LM)"),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true", help="larger workloads")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    rows = []
+    failures = []
+    for name in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        mod = importlib.import_module(f".{name}", __package__)
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            r = mod.run(quick=not args.full)
+        except Exception:
+            failures.append(name)
+            print(f"# {name} FAILED\n{traceback.format_exc()}", flush=True)
+            continue
+        rows += r
+        print_rows(r)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+    # ---- claims validation ----
+    index = {(r["bench"], r["variant"], r["metric"]): r["value"] for r in rows}
+    print("\n# === paper-claim validation ===")
+    n_ok = 0
+    n_checked = 0
+    for bench, variant, metric, pred, ref in CLAIMS:
+        key = (bench, variant, metric)
+        if key not in index:
+            if args.only:
+                continue
+            print(f"MISSING  {ref}  [{bench}/{variant}/{metric}]")
+            continue
+        v = index[key]
+        ok = pred(v)
+        n_checked += 1
+        n_ok += ok
+        print(f"{'PASS' if ok else 'FAIL'}  {ref}  -> measured {v:.3g}")
+    print(f"\n# claims: {n_ok}/{n_checked} pass; bench modules failed: {failures or 'none'}")
+    return 0 if (n_ok == n_checked and not failures) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,29 @@
+"""The six Graphyti algorithms (paper §4.1–4.6), baseline + optimized."""
+from .betweenness import bc_fused, bc_multisource, bc_unisource
+from .bfs import UNREACHED, bfs_multi, bfs_uni
+from .coreness import coreness
+from .diameter import diameter_multisource, diameter_unisource
+from .louvain import LouvainResult, louvain, modularity
+from .pagerank import pagerank_inmem, pagerank_pull, pagerank_push
+from .triangles import TriangleResult, count_triangles, triangles_blocked_mxu
+
+__all__ = [
+    "UNREACHED",
+    "LouvainResult",
+    "TriangleResult",
+    "bc_fused",
+    "bc_multisource",
+    "bc_unisource",
+    "bfs_multi",
+    "bfs_uni",
+    "coreness",
+    "count_triangles",
+    "diameter_multisource",
+    "diameter_unisource",
+    "louvain",
+    "modularity",
+    "pagerank_inmem",
+    "pagerank_pull",
+    "pagerank_push",
+    "triangles_blocked_mxu",
+]

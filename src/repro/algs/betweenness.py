@@ -1,0 +1,239 @@
+"""Betweenness centrality (Brandes) — paper §4.4.
+
+Principles P5 — *develop asynchronous applications* and *utilize functional
+constructs*.
+
+Three variants, mirroring Fig. 6:
+
+  * ``bc_unisource``   — K independent single-source Brandes runs.
+  * ``bc_multisource`` — K sources advance **synchronously**: all forward
+    levels complete (barrier), then all backward levels run together.
+  * ``bc_fused``       — the SPMD adaptation of the paper's *asynchronous*
+    variant: every source carries its own (phase, level) metadata, and a
+    single superstep advances forward-phase sources AND backward-phase
+    sources at once.  Chunks touched by both phases in the same superstep
+    are fetched once (`chunk_activity` union accounting) — the analogue of
+    FlashGraph's page-cache hits when phases overlap.  True MIMD per-vertex
+    asynchrony does not transfer to lockstep SPMD; per-source phase fusion
+    is the transferable core (see DESIGN.md §8).
+
+The forward phase is a per-source functional ``add`` reduction of path
+counts; the backward phase a functional ``add`` of dependency scores — the
+paper's "functional constructs" principle maps directly onto segment
+reductions under the plus_times semiring.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import IOStats, SemGraph, bsp_run, sem_spmv
+from ..core.sem import chunk_activity
+from ..core.semiring import PLUS_TIMES
+
+__all__ = ["bc_unisource", "bc_multisource", "bc_fused"]
+
+
+class _FwdState(NamedTuple):
+    sigma: jnp.ndarray  # f32[n, K] shortest-path counts
+    dist: jnp.ndarray  # int32[n, K] (-1 = unreached)
+    frontier: jnp.ndarray  # bool[n, K]
+    level: jnp.ndarray  # int32
+    io: IOStats
+
+
+def _forward(sg: SemGraph, sources: jnp.ndarray, max_iters: int):
+    """Synchronous multi-source BFS with path counting."""
+    n = sg.n
+    K = sources.shape[0]
+    ar = jnp.arange(K)
+    sigma0 = jnp.zeros((n, K)).at[sources, ar].set(1.0)
+    dist0 = jnp.full((n, K), -1, jnp.int32).at[sources, ar].set(0)
+    front0 = jnp.zeros((n, K), bool).at[sources, ar].set(True)
+
+    def step(s: _FwdState):
+        active = jnp.any(s.frontier, axis=1)
+        send = jnp.where(s.frontier, s.sigma, 0.0)
+        recv, st = sem_spmv(sg.out_store, send, active, PLUS_TIMES)
+        newly = (recv > 0) & (s.dist < 0)
+        sigma = jnp.where(newly, recv, s.sigma)
+        dist = jnp.where(newly, s.level + 1, s.dist)
+        io = (s.io + st)._replace(supersteps=s.io.supersteps + 1)
+        done = ~jnp.any(newly)
+        return _FwdState(sigma, dist, newly, s.level + 1, io), done
+
+    def wrapped(carry):
+        s, _ = carry
+        s, done = step(s)
+        return (s, done), done
+
+    s0 = _FwdState(sigma0, dist0, front0, jnp.zeros((), jnp.int32), IOStats.zero())
+    (s, _), iters = bsp_run(wrapped, (s0, jnp.zeros((), bool)), max_iters)
+    return s, iters
+
+
+def _backward(sg: SemGraph, sigma, dist, max_level, max_iters):
+    """Synchronous dependency accumulation, level = max_level-1 .. 0."""
+    n, K = sigma.shape
+
+    def step(carry):
+        delta, level, io = carry
+        # senders: vertices at dist == level+1 (per source lane)
+        send_mask = dist == (level + 1)
+        x = jnp.where(send_mask, (1.0 + delta) / jnp.maximum(sigma, 1e-30), 0.0)
+        recv_mask = dist == level
+        active = jnp.any(recv_mask, axis=1)
+        recv, st = sem_spmv(sg.out_store, x, active, PLUS_TIMES, reverse=True)
+        delta = jnp.where(recv_mask, delta + sigma * recv, delta)
+        io = (io + st)._replace(supersteps=io.supersteps + 1)
+        return delta, level - 1, io
+
+    def cond(carry):
+        _, level, _ = carry
+        return level >= 0
+
+    delta0 = jnp.zeros((n, K))
+    delta, _, io = jax.lax.while_loop(
+        cond, step, (delta0, max_level - 1, IOStats.zero())
+    )
+    return delta, io
+
+
+def _finish(delta, sources):
+    """BC accumulation (functional add over source lanes, excluding sources)."""
+    K = sources.shape[0]
+    delta = delta.at[sources, jnp.arange(K)].set(0.0)
+    return jnp.sum(delta, axis=1)
+
+
+def bc_multisource(
+    sg: SemGraph, sources: jnp.ndarray, *, max_iters: int | None = None
+) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
+    """Synchronous multi-source Brandes. Returns (bc[n], IOStats, supersteps)."""
+    sources = jnp.asarray(sources, jnp.int32)
+    max_iters = max_iters or sg.n + 1
+    fwd, fwd_iters = _forward(sg, sources, max_iters)
+    max_level = jnp.max(jnp.where(fwd.dist < 0, -1, fwd.dist))
+    delta, bio = _backward(sg, fwd.sigma, fwd.dist, max_level, max_iters)
+    io = fwd.io + bio
+    return _finish(delta, sources), io, fwd_iters + jnp.maximum(max_level, 0)
+
+
+def bc_unisource(
+    sg: SemGraph, sources: jnp.ndarray, *, max_iters: int | None = None
+) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
+    """K separate single-source runs (the Fig. 6 baseline)."""
+    sources = jnp.asarray(sources, jnp.int32)
+    bc = jnp.zeros(sg.n)
+    io = IOStats.zero()
+    steps = jnp.zeros((), jnp.int32)
+    for i in range(sources.shape[0]):
+        b, st, it = bc_multisource(sg, sources[i : i + 1], max_iters=max_iters)
+        bc, io, steps = bc + b, io + st, steps + it
+    return bc, io, steps
+
+
+class _FusedState(NamedTuple):
+    sigma: jnp.ndarray  # f32[n, K]
+    dist: jnp.ndarray  # int32[n, K]
+    frontier: jnp.ndarray  # bool[n, K] forward frontier
+    delta: jnp.ndarray  # f32[n, K]
+    phase: jnp.ndarray  # int32[K] 0=forward 1=backward 2=done
+    level: jnp.ndarray  # int32[K] per-source current level
+    io: IOStats
+    shared: jnp.ndarray  # int32 chunks saved by fwd/bwd fetch overlap
+
+
+def bc_fused(
+    sg: SemGraph, sources: jnp.ndarray, *, max_iters: int | None = None
+) -> tuple[jnp.ndarray, IOStats, jnp.ndarray, jnp.ndarray]:
+    """Phase-fused multi-source Brandes (the paper's async variant, §4.4).
+
+    Each source runs forward BFS at its own pace; the moment a source's
+    frontier drains it flips to the backward phase while other sources are
+    still searching.  One superstep issues a single union of chunk fetches
+    for both phases.
+
+    Returns (bc[n], IOStats, supersteps, shared_chunks) where
+    ``shared_chunks`` counts fetches served to both phases at once (the
+    cache-hit surplus of Fig. 6a).
+    """
+    n = sg.n
+    sources = jnp.asarray(sources, jnp.int32)
+    K = sources.shape[0]
+    ar = jnp.arange(K)
+    max_iters = max_iters or 2 * (n + 2)
+
+    s0 = _FusedState(
+        sigma=jnp.zeros((n, K)).at[sources, ar].set(1.0),
+        dist=jnp.full((n, K), -1, jnp.int32).at[sources, ar].set(0),
+        frontier=jnp.zeros((n, K), bool).at[sources, ar].set(True),
+        delta=jnp.zeros((n, K)),
+        phase=jnp.zeros(K, jnp.int32),
+        level=jnp.zeros(K, jnp.int32),
+        io=IOStats.zero(),
+        shared=jnp.zeros((), jnp.int32),
+    )
+
+    def step(s: _FusedState):
+        fwd_lane = s.phase == 0
+        bwd_lane = s.phase == 1
+
+        # ---- forward sub-step (lanes in phase 0) ----
+        fwd_front = s.frontier & fwd_lane[None, :]
+        fwd_active = jnp.any(fwd_front, axis=1)
+        send = jnp.where(fwd_front, s.sigma, 0.0)
+        recv, st_f = sem_spmv(sg.out_store, send, fwd_active, PLUS_TIMES)
+        newly = (recv > 0) & (s.dist < 0) & fwd_lane[None, :]
+        sigma = jnp.where(newly, recv, s.sigma)
+        dist = jnp.where(newly, s.level[None, :] + 1, s.dist)
+
+        # ---- backward sub-step (lanes in phase 1, per-lane level) ----
+        send_mask = (s.dist == (s.level[None, :] + 1)) & bwd_lane[None, :]
+        x = jnp.where(send_mask, (1.0 + s.delta) / jnp.maximum(s.sigma, 1e-30), 0.0)
+        recv_mask = (s.dist == s.level[None, :]) & bwd_lane[None, :]
+        bwd_active = jnp.any(recv_mask, axis=1)
+        brecv, st_b = sem_spmv(sg.out_store, x, bwd_active, PLUS_TIMES, reverse=True)
+        delta = jnp.where(recv_mask, s.delta + s.sigma * brecv, s.delta)
+
+        # ---- shared-fetch accounting: union the two chunk sets ----
+        act_f = chunk_activity(sg.out_store, fwd_active)
+        act_b = chunk_activity(sg.out_store, bwd_active)
+        both = jnp.sum((act_f & act_b).astype(jnp.int32))
+        # Requests are still issued by both phases; the page cache serves the
+        # second phase's overlapping chunks for free (records saved).
+        io = s.io + st_f + st_b
+        io = io._replace(
+            records=io.records - both * sg.out_store.chunk_size,
+            supersteps=io.supersteps + 1,
+        )
+
+        # ---- per-source phase/level transitions ----
+        lane_has_new = jnp.any(newly, axis=0)
+        fwd_to_bwd = fwd_lane & ~lane_has_new
+        # deepest level reached per lane (senders for the first bwd step)
+        deepest = jnp.max(dist, axis=0)
+        level = jnp.where(fwd_to_bwd, jnp.maximum(deepest - 1, -1), s.level)
+        phase = jnp.where(fwd_to_bwd & (level < 0), 2, jnp.where(fwd_to_bwd, 1, s.phase))
+        # backward lanes step down; done below level 0
+        stepped_down = jnp.where(bwd_lane, s.level - 1, level)
+        level = jnp.where(bwd_lane, stepped_down, level)
+        phase = jnp.where(bwd_lane & (stepped_down < 0), 2, phase)
+        level = jnp.where(fwd_lane & lane_has_new, s.level + 1, level)
+
+        frontier = newly
+        done = jnp.all(phase == 2)
+        return (
+            _FusedState(sigma, dist, frontier, delta, phase, level, io, s.shared + both),
+            done,
+        )
+
+    def wrapped(carry):
+        s, _ = carry
+        s, done = step(s)
+        return (s, done), done
+
+    (s, _), iters = bsp_run(wrapped, (s0, jnp.zeros((), bool)), max_iters)
+    return _finish(s.delta, sources), s.io, iters, s.shared

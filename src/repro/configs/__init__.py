@@ -1,0 +1,23 @@
+"""Configs: model architectures, shapes, and the --arch registry."""
+from .base import SHAPES, ModelConfig, ShapeConfig, TrainConfig
+from .registry import (
+    LONG_CONTEXT_OK,
+    cell_is_skipped,
+    cells,
+    get_config,
+    get_smoke,
+    list_archs,
+)
+
+__all__ = [
+    "SHAPES",
+    "LONG_CONTEXT_OK",
+    "ModelConfig",
+    "ShapeConfig",
+    "TrainConfig",
+    "cell_is_skipped",
+    "cells",
+    "get_config",
+    "get_smoke",
+    "list_archs",
+]

@@ -1,0 +1,58 @@
+"""--arch <id> registry over the assigned architecture configs."""
+from __future__ import annotations
+
+import importlib
+
+from .base import SHAPES, ModelConfig, ShapeConfig
+
+_MODULES = {
+    "gemma3-4b": "gemma3_4b",
+    "command-r-35b": "command_r_35b",
+    "gemma-2b": "gemma_2b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "mamba2-370m": "mamba2_370m",
+    "whisper-base": "whisper_base",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+    "dbrx-132b": "dbrx_132b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "zamba2-2.7b": "zamba2_2_7b",
+}
+
+# Cells skipped per assignment rules: long_500k needs sub-quadratic
+# attention (see DESIGN.md §4 for the rationale per architecture).
+LONG_CONTEXT_OK = {
+    "gemma3-4b",        # SWA local layers bound the per-step work
+    "h2o-danube-1.8b",  # SWA everywhere
+    "mamba2-370m",      # O(1) state
+    "zamba2-2.7b",      # hybrid
+}
+
+
+def list_archs() -> list[str]:
+    return list(_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f".{_MODULES[arch]}", __package__)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _module(arch).smoke()
+
+
+def cell_is_skipped(arch: str, shape: str) -> str | None:
+    """Reason string if (arch, shape) is skipped, else None."""
+    if shape == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return "pure full attention: long_500k needs sub-quadratic attention"
+    return None
+
+
+def cells() -> list[tuple[str, str]]:
+    """All 40 (arch, shape) cells in a stable order."""
+    return [(a, s) for a in _MODULES for s in SHAPES]

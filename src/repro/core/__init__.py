@@ -1,0 +1,37 @@
+"""SEM vertex-centric engine core (the paper's contribution, TPU-adapted)."""
+from .engine import bsp_run, flat_spmv, hybrid_spmv, spmv
+from .sem import (
+    EDGE_RECORD_BYTES,
+    EdgeChunkStore,
+    IOStats,
+    SemGraph,
+    build_store,
+    chunk_activity,
+    device_graph,
+    p2p_spmv,
+    pad_state,
+    sem_spmv,
+)
+from .semiring import MAX_TIMES, MIN_PLUS, OR_AND, PLUS_TIMES, Semiring
+
+__all__ = [
+    "EDGE_RECORD_BYTES",
+    "EdgeChunkStore",
+    "IOStats",
+    "SemGraph",
+    "Semiring",
+    "MAX_TIMES",
+    "MIN_PLUS",
+    "OR_AND",
+    "PLUS_TIMES",
+    "bsp_run",
+    "build_store",
+    "chunk_activity",
+    "device_graph",
+    "flat_spmv",
+    "hybrid_spmv",
+    "p2p_spmv",
+    "pad_state",
+    "sem_spmv",
+    "spmv",
+]

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLM, TokenStream, pack_documents, sharded_batches
+
+__all__ = ["SyntheticLM", "TokenStream", "pack_documents", "sharded_batches"]

@@ -1,0 +1,171 @@
+"""Fault tolerance: supervisor loop, elastic re-mesh, straggler mitigation.
+
+On a real pod these events come from the runtime (ICI timeouts, host
+heartbeats); in this CPU container they are *injected* so the recovery
+machinery itself is exercised end-to-end by tests and the train driver:
+
+  * **Crash-restart** — any step may raise :class:`DeviceFailure`.  The
+    supervisor restores the newest complete checkpoint and replays from
+    there.  With the stateless data pipeline (repro.data) replay is exact:
+    batch(step) is a pure function, so no data is skipped or repeated.
+  * **Elastic re-mesh** — recovery may come up on a *different* device
+    count (node lost).  ``mesh_factory(scale)`` builds the degraded mesh;
+    checkpoints store global arrays, so restore re-shards onto the new
+    topology and the jitted step re-lowers automatically (new shardings).
+  * **Straggler mitigation** — per-step deadline from a moving median.
+    A step exceeding ``straggler_factor`` x median is logged; after
+    ``straggler_patience`` consecutive violations the supervisor treats the
+    slow node as failed (gradient-skip quorum semantics: the step's update
+    is kept — XLA's synchronous collectives already serialized it — but
+    the *node* is evicted via the elastic path, which is how synchronous
+    SPMD systems actually handle persistent stragglers).
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, Optional
+
+from ..checkpoint import CheckpointManager
+
+__all__ = ["DeviceFailure", "FailurePlan", "Supervisor", "SupervisorReport"]
+
+
+class DeviceFailure(RuntimeError):
+    """Simulated loss of a device/node during a step."""
+
+
+@dataclasses.dataclass
+class FailurePlan:
+    """Injected events: {step: kind} with kind in 'crash' | 'crash_shrink'
+    | 'straggle'.  Each event fires once."""
+
+    events: dict
+
+    def pop(self, step: int) -> Optional[str]:
+        return self.events.pop(step, None)
+
+
+@dataclasses.dataclass
+class SupervisorReport:
+    steps_run: int = 0
+    restarts: int = 0
+    remesh_events: int = 0
+    straggler_events: int = 0
+    evictions: int = 0
+    final_scale: float = 1.0
+    log: list = dataclasses.field(default_factory=list)
+
+
+class Supervisor:
+    """Drives a train loop to ``total_steps`` through injected failures.
+
+    Args:
+      ckpt: CheckpointManager for the run.
+      make_step: scale -> step_fn(state, batch) -> (state, metrics).  Called
+        again after every re-mesh (re-lowering against the new topology).
+      init_state: scale -> fresh state (used only when no checkpoint exists).
+      batch_fn: step -> batch (pure; the stateless pipeline).
+      mesh_factory: scale -> mesh-like handle passed through to make_step.
+    """
+
+    def __init__(
+        self,
+        ckpt: CheckpointManager,
+        make_step: Callable[[float], Callable],
+        init_state: Callable[[float], Any],
+        batch_fn: Callable[[int], Any],
+        *,
+        checkpoint_every: int = 10,
+        straggler_factor: float = 3.0,
+        straggler_patience: int = 3,
+        plan: Optional[FailurePlan] = None,
+    ):
+        self.ckpt = ckpt
+        self.make_step = make_step
+        self.init_state = init_state
+        self.batch_fn = batch_fn
+        self.checkpoint_every = checkpoint_every
+        self.straggler_factor = straggler_factor
+        self.straggler_patience = straggler_patience
+        self.plan = plan or FailurePlan({})
+
+    def run(self, total_steps: int) -> tuple[Any, SupervisorReport]:
+        rep = SupervisorReport()
+        scale = 1.0
+        state, start = self._restore_or_init(scale, rep)
+        step_fn = self.make_step(scale)
+        durations: list = []
+        slow_streak = 0
+        step = start
+        while step < total_steps:
+            batch = self.batch_fn(step)
+            event = self.plan.pop(step)
+            t0 = time.perf_counter()
+            try:
+                if event in ("crash", "crash_shrink"):
+                    raise DeviceFailure(f"injected at step {step}")
+                state, metrics = step_fn(state, batch)
+                if event == "straggle":  # injected slow step
+                    time.sleep(min(self._deadline(durations), 0.2) * 1.5 + 0.01)
+            except DeviceFailure as e:
+                rep.restarts += 1
+                rep.log.append(f"step {step}: {e}; restoring")
+                if event == "crash_shrink":
+                    scale *= 0.5  # lost a node: come back degraded
+                    rep.remesh_events += 1
+                    rep.log.append(f"elastic re-mesh at scale {scale}")
+                self.ckpt.wait()
+                state, step = self._restore_or_init(scale, rep)
+                step_fn = self.make_step(scale)
+                durations.clear()
+                slow_streak = 0
+                continue
+            dt = time.perf_counter() - t0
+            # --- straggler detection on a moving median ---
+            if len(durations) >= 5 and dt > self._deadline(durations):
+                rep.straggler_events += 1
+                slow_streak += 1
+                rep.log.append(f"step {step}: straggler ({dt * 1e3:.1f} ms)")
+                if slow_streak >= self.straggler_patience:
+                    rep.evictions += 1
+                    rep.remesh_events += 1
+                    scale *= 0.5
+                    rep.log.append(
+                        f"step {step}: evicting persistent straggler; "
+                        f"re-mesh at scale {scale}"
+                    )
+                    self.ckpt.save(step + 1, state)
+                    state, step = self._restore_or_init(scale, rep)
+                    step_fn = self.make_step(scale)
+                    durations.clear()
+                    slow_streak = 0
+                    continue
+            else:
+                slow_streak = 0
+                durations.append(dt)
+                if len(durations) > 50:
+                    durations.pop(0)
+            step += 1
+            rep.steps_run += 1
+            if step % self.checkpoint_every == 0:
+                self.ckpt.save(step, state, blocking=False)
+        self.ckpt.wait()
+        self.ckpt.save(total_steps, state)
+        rep.final_scale = scale
+        return state, rep
+
+    def _deadline(self, durations: list) -> float:
+        if len(durations) < 5:
+            return float("inf")
+        return self.straggler_factor * statistics.median(durations)
+
+    def _restore_or_init(self, scale: float, rep: SupervisorReport):
+        target = self.init_state(scale)
+        try:
+            state, step = self.ckpt.restore(target)
+            rep.log.append(f"restored step {step} at scale {scale}")
+            return state, step
+        except FileNotFoundError:
+            return target, 0

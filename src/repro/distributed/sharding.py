@@ -1,0 +1,182 @@
+"""Logical-axis -> mesh PartitionSpec rules (DP/FSDP/TP/EP/SP).
+
+Parallelism map (DESIGN.md §5):
+  * batch            -> ('pod', 'data')   pure DP across pods, DP within
+  * weight 'embed'   -> 'data'            FSDP (ZeRO-3): all-gather on use,
+                                          reduce-scatter on grads (XLA SPMD)
+  * 'vocab'/'heads'/'kv'/'ffn'/'inner'  -> 'model'   tensor parallel
+  * 'experts'        -> 'model'           expert parallel (all-to-all)
+  * decode KV cache  -> batch over 'data' when divisible, else sequence
+                        over 'data' (sequence parallelism for long_500k)
+
+Any weight dim not divisible by its mesh axis falls back to replication on
+that axis — small kv projections (kv=4 on a 16-way model axis) replicate
+rather than fail, exactly what a production launcher must do.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "LOGICAL_RULES",
+    "param_pspecs",
+    "param_shardings",
+    "batch_pspec",
+    "data_axes",
+    "cache_pspecs",
+    "constrain",
+]
+
+LOGICAL_RULES = {
+    "vocab": "model",
+    "ffn": "model",
+    "heads": "model",
+    "kv": "model",
+    "experts": "model",
+    "inner": "model",
+    "embed": "data",  # FSDP
+    "layers": None,
+}
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    """The batch/FSDP mesh axes: ('pod','data') on multi-pod, ('data',)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[a] for a in name]))
+    return mesh.shape[name]
+
+
+def _spec_for(
+    axes: tuple, shape: tuple, mesh: Mesh, fsdp_axes: tuple,
+    moe_2d_axes: tuple = (),
+) -> P:
+    """Map one param's logical axes to a PartitionSpec with divisibility
+    fallback. 'embed' FSDP-shards over ``fsdp_axes`` unless taken.
+
+    ``moe_2d_axes``: for EXPERT tensors in serving mode, the 'ffn' dim
+    shards over these (data) axes instead of the (already-taken) 'model'
+    axis — a 235B MoE cannot replicate its experts over the data axes
+    (29 GiB/device), but 2D (experts x model, ffn x data) keeps them
+    resident at 1/256th with only a bucket-sized psum at the down-proj.
+    """
+    entries = []
+    used = set()
+    is_expert = "experts" in axes
+    for dim, ax in zip(shape, axes):
+        rule = LOGICAL_RULES.get(ax) if ax else None
+        if ax == "embed":
+            rule = fsdp_axes if len(fsdp_axes) > 1 else (
+                fsdp_axes[0] if fsdp_axes else None
+            )
+        if (
+            ax == "ffn"
+            and is_expert
+            and moe_2d_axes
+            and "model" in used
+        ):
+            rule = moe_2d_axes if len(moe_2d_axes) > 1 else moe_2d_axes[0]
+        if rule is None:
+            entries.append(None)
+            continue
+        names = rule if isinstance(rule, tuple) else (rule,)
+        if any(n in used for n in names):
+            entries.append(None)
+            continue
+        size = _axis_size(mesh, rule)
+        if dim % size != 0:
+            entries.append(None)
+            continue
+        used.update(names)
+        entries.append(rule)
+    return P(*entries)
+
+
+def param_pspecs(
+    axes_tree, shapes_tree, mesh: Mesh, *, fsdp: bool = True,
+    moe_2d: bool = False,
+):
+    """PartitionSpec tree for a param tree (axes + shapes run in lockstep)."""
+    fsdp_axes = data_axes(mesh) if fsdp else ()
+    moe_axes = data_axes(mesh) if moe_2d else ()
+
+    def is_axes(x):
+        return isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x
+        )
+
+    return jax.tree_util.tree_map(
+        lambda ax, sh: _spec_for(ax, tuple(sh.shape), mesh, fsdp_axes, moe_axes),
+        axes_tree,
+        shapes_tree,
+        is_leaf=lambda x: is_axes(x),
+    )
+
+
+def param_shardings(axes_tree, shapes_tree, mesh: Mesh, *, fsdp: bool = True):
+    specs = param_pspecs(axes_tree, shapes_tree, mesh, fsdp=fsdp)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_pspec(global_batch: int, mesh: Mesh) -> P:
+    """Shard the batch dim over ('pod','data') if divisible, else replicate."""
+    ax = data_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in ax])) if ax else 1
+    if ax and global_batch % size == 0:
+        return P(ax if len(ax) > 1 else ax[0])
+    # try data-only
+    if "data" in mesh.axis_names and global_batch % mesh.shape["data"] == 0:
+        return P("data")
+    return P()
+
+
+def cache_pspecs(cache_shapes, mesh: Mesh, global_batch: int):
+    """Decode-cache shardings: batch over data axes when divisible;
+    otherwise shard the sequence dim (sequence parallelism, long_500k) and
+    heads over 'model'.
+
+    Works on the pytree of ShapeDtypeStructs from eval_shape(init_cache).
+    """
+    ax = data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in ax])) if ax else 1
+    batch_ok = ax and global_batch % dsize == 0
+    data_entry = ax if len(ax) > 1 else (ax[0] if ax else None)
+    msize = mesh.shape.get("model", 1)
+
+    def spec(leaf):
+        shp = tuple(leaf.shape)
+        nd = len(shp)
+        if nd == 0:
+            return P()
+        entries = [None] * nd
+        if batch_ok and shp[0] == global_batch:
+            entries[0] = data_entry
+        elif nd >= 2 and shp[0] == global_batch and not batch_ok:
+            # batch too small: SP — shard the sequence dim (axis 1)
+            if shp[1] % dsize == 0 and shp[1] > 1:
+                entries[1] = data_entry
+        # shard a heads-like dim over model if divisible (dims 2+)
+        for i in range(2, nd):
+            if shp[i] % msize == 0 and shp[i] >= msize and entries[i] is None:
+                entries[i] = "model"
+                break
+        return P(*entries)
+
+    return jax.tree_util.tree_map(spec, cache_shapes)
+
+
+def constrain(x, mesh: Mesh, spec: P):
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

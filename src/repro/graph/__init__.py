@@ -1,0 +1,15 @@
+"""Host-side graph containers and generators."""
+from .csr import Graph, degree_order, from_edges, reverse
+from .generators import cycle_graph, erdos_renyi, path_graph, rmat, star_graph
+
+__all__ = [
+    "Graph",
+    "cycle_graph",
+    "degree_order",
+    "erdos_renyi",
+    "from_edges",
+    "path_graph",
+    "reverse",
+    "rmat",
+    "star_graph",
+]

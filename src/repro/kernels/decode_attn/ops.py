@@ -1,0 +1,59 @@
+"""jit'd wrapper: cache-layout plumbing + block-needed precompute.
+
+``decode_attention`` is a drop-in for the jnp decode-attention math in
+``repro.models.attention.attn_decode`` (post cache-update): it takes the
+[B, T, KV, hd] cache, the per-slot stored positions and the current
+position, derives which T-blocks hold any live slot (the paper's
+chunk-activity test), and streams only those through the Pallas kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attn_pallas
+
+__all__ = ["decode_attention"]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_t", "interpret")
+)
+def decode_attention(
+    q: jnp.ndarray,  # [B, 1, H, hd] or [B, H, hd] new-token queries
+    k: jnp.ndarray,  # [B, T, KV, hd]
+    v: jnp.ndarray,  # [B, T, KV, hd]
+    pos: jnp.ndarray,  # [B, T] stored absolute positions (-1 = empty)
+    cur: jnp.ndarray,  # [B] absolute position of the new token
+    *,
+    window: int = 0,
+    block_t: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Returns [B, H, hd] attention output (f32) with KV-block streaming."""
+    if q.ndim == 4:
+        q = q[:, 0]
+    b, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    bt = min(block_t, t)
+    while t % bt:
+        bt -= 1
+    ntb = t // bt
+
+    # chunk-activity test: does block i hold any live slot for row b?
+    pb = pos.reshape(b, ntb, bt)
+    live = pb >= 0
+    live = live & (pb <= cur[:, None, None])
+    if window > 0:
+        live = live & (pb > (cur[:, None, None] - window))
+    needed = live.any(axis=2).astype(jnp.int32)  # [B, nTb]
+
+    qg = q.reshape(b, kv, g, hd)
+    out = decode_attn_pallas(
+        qg, k, v, pos, cur, needed, window=window, block_t=bt,
+        interpret=interpret,
+    )
+    return out.reshape(b, h, hd)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the decode-attention kernel (no blocking)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["decode_attention_ref"]
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,  # [B, 1, H, hd] or [B, H, hd]
+    k: jnp.ndarray,  # [B, T, KV, hd]
+    v: jnp.ndarray,  # [B, T, KV, hd]
+    pos: jnp.ndarray,  # [B, T]
+    cur: jnp.ndarray,  # [B]
+    *,
+    window: int = 0,
+) -> jnp.ndarray:
+    if q.ndim == 4:
+        q = q[:, 0]
+    b, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,btkh->bkgt", qg, k.astype(jnp.float32)) * hd**-0.5
+    valid = (pos >= 0) & (pos <= cur[:, None])
+    if window > 0:
+        valid = valid & (pos > (cur[:, None] - window))
+    s = jnp.where(valid[:, None, None], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", p, v.astype(jnp.float32))
+    return out.reshape(b, h, hd)

@@ -1,0 +1,4 @@
+from .ops import BlockedGraph, blocked_spmv, build_blocked
+from .ref import blocked_spmv_ref
+
+__all__ = ["BlockedGraph", "blocked_spmv", "build_blocked", "blocked_spmv_ref"]

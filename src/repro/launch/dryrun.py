@@ -1,0 +1,461 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as its own process (``python -m repro.launch.dryrun``): the
+XLA_FLAGS line above executes before any jax import so the 512 placeholder
+host devices exist when jax initializes.
+
+Per cell this produces:
+  * ``compiled.memory_analysis()``  — proves the cell fits per-device HBM,
+  * ``compiled.cost_analysis()``    — HLO FLOPs / bytes for the roofline,
+  * collective-operand bytes parsed from the optimized HLO text,
+grouped into JSON under --out (default experiments/dryrun/).
+
+Driver mode (--all) executes each cell in a subprocess so one failing or
+OOMing compile cannot take down the sweep.
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+__all__ = ["run_cell", "main"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    """bytes of one 'bf16[128,256]' style HLO type string."""
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", type_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def _computations(hlo_text: str):
+    """Split HLO text into {computation name: [instruction lines]} + entry."""
+    comps: dict = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if (line.startswith("%") or line.startswith("ENTRY")) and stripped.endswith(
+            "{"
+        ):
+            name = line.split("(")[0].strip()
+            if name.startswith("ENTRY"):
+                name = name.split()[-1].strip()
+                entry = name
+            cur = name
+            comps[cur] = []
+        elif stripped == "}":
+            cur = None
+        elif cur is not None:
+            comps[cur].append(stripped)
+    return comps, entry
+
+
+_LOOP_ATTR = re.compile(r"(?:body|condition)=(%[\w.\-]+)")
+_CALL_ATTR = re.compile(r"(?:to_apply|calls)=(%[\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP = re.compile(r'known_trip_count":\{"n":"(\d+)')
+
+
+def _multiplicities(comps: dict, entry: str) -> dict:
+    """Execution count of each computation, multiplying while trip counts
+    down the call graph.  Loop bodies without a known trip count get 1 (an
+    under-estimate we cannot improve from text)."""
+    edges: dict = {c: [] for c in comps}
+    for cname, lines in comps.items():
+        for ln in lines:
+            trip = 1
+            mt = _TRIP.search(ln)
+            if mt:
+                trip = int(mt.group(1))
+            for m in _LOOP_ATTR.finditer(ln):
+                edges[cname].append((m.group(1), trip))
+            for m in _CALL_ATTR.finditer(ln):
+                edges[cname].append((m.group(1), 1))
+            for m in _BRANCHES.finditer(ln):
+                for b in m.group(1).split(","):
+                    edges[cname].append((b.strip(), 1))
+    # topological order via DFS postorder (HLO call graphs are DAGs)
+    order, seen = [], set()
+
+    def dfs(c):
+        if c in seen or c not in comps:
+            return
+        seen.add(c)
+        for callee, _ in edges.get(c, ()):
+            dfs(callee)
+        order.append(c)
+
+    dfs(entry)
+    mult = {c: 0 for c in seen}
+    mult[entry] = 1
+    for c in reversed(order):
+        for callee, w in edges.get(c, ()):
+            if callee in mult:
+                mult[callee] += mult[c] * w
+    return mult
+
+
+def _group_size(line: str) -> int:
+    """Participants per replica group, parsed from ``replica_groups=``.
+
+    Handles both the iota form ``replica_groups=[G,S]<=[...]...`` (shape =
+    [num_groups, group_size]) and the explicit form ``{{0,16,...},{...}}``.
+    Returns 1 if absent (degenerate single-participant group).
+    """
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective operand bytes, parsed from optimized (post-SPMD,
+    per-device) HLO text — **loop-aware**: a collective inside a scanned
+    while body is multiplied by the loop's known trip count (HloCostAnalysis
+    and a naive text scan both count it once, which silently drops ~n_layers
+    x the real traffic).
+
+    This XLA version prints operands without inline types, so operand size
+    is recovered from the *result* type(s) on the LHS plus the replica-group
+    size G: all-reduce/all-to-all/collective-permute results equal their
+    operands; an all-gather result is G x its operand; a reduce-scatter
+    operand is G x its result.
+    """
+    comps, entry = _computations(hlo_text)
+    mult = _multiplicities(comps, entry) if entry else {}
+    out = {k: {"bytes": 0, "count": 0} for k in _COLLECTIVES}
+    for cname, lines in comps.items():
+        k = mult.get(cname, 1)
+        if k == 0:  # unreachable computation
+            continue
+        for line in lines:
+            for op in _COLLECTIVES:
+                # '= TYPE op(' | '= (T1, T2) op(' | async '-start' variants
+                m = re.search(
+                    r"= (\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\{[0-9,]*\}) "
+                    + re.escape(op)
+                    + r"(-start)?\(",
+                    line,
+                )
+                if m is None:
+                    continue
+                types = re.findall(r"[a-z0-9]+\[[0-9,]*\]", m.group(1))
+                result_b = sum(_shape_bytes(t) for t in types)
+                g = max(_group_size(line), 1)
+                ring = (g - 1) / g  # ring-algorithm traffic fraction
+                if op == "all-gather":
+                    operand_b = result_b // g
+                    link_b = result_b * ring  # each shard sent g-1 times
+                elif op == "reduce-scatter":
+                    operand_b = result_b * g
+                    link_b = operand_b * ring
+                elif op == "all-reduce":
+                    operand_b = result_b
+                    link_b = 2 * operand_b * ring  # reduce-scatter + all-gather
+                elif op == "all-to-all":
+                    operand_b = result_b
+                    link_b = operand_b * ring
+                else:  # collective-permute
+                    operand_b = result_b
+                    link_b = result_b
+                out[op]["bytes"] += operand_b * k
+                out[op]["link_bytes"] = out[op].get("link_bytes", 0) + int(
+                    link_b * k
+                )
+                out[op]["count"] += k
+                break
+    out["total_bytes"] = sum(v["bytes"] for k_, v in out.items() if k_ in _COLLECTIVES)
+    out["total_link_bytes"] = sum(
+        v.get("link_bytes", 0) for k_, v in out.items() if k_ in _COLLECTIVES
+    )
+    out["total_count"] = sum(v["count"] for k_, v in out.items() if k_ in _COLLECTIVES)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, microbatches: int = 0):
+    """Lower + compile one cell; returns the result dict."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..configs import SHAPES, TrainConfig, cell_is_skipped, get_config
+    from ..distributed.sharding import (
+        batch_pspec,
+        cache_pspecs,
+        param_pspecs,
+    )
+    from ..models import build_model
+    from .mesh import make_production_mesh
+    from .specs import cache_specs, input_specs, state_specs
+    from .steps import make_decode_step, make_prefill_step, make_train_step
+
+    shape = SHAPES[shape_name]
+    skip = cell_is_skipped(arch, shape_name)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "status": "skipped", "reason": skip}
+
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg).set_mesh(mesh)
+    pmodel = build_model(cfg)  # plain twin for the unpartitioned flop probe
+    n_dev = mesh.size
+
+    params_s, opt_s, axes = state_specs(model)
+    p_specs = param_pspecs(axes, params_s, mesh)
+    p_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), p_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    # optimizer m/v mirror the param shardings; step is replicated
+    from ..optim import OptState
+
+    opt_shardings = OptState(
+        m=p_sh, v=p_sh, step=NamedSharding(mesh, P())
+    )
+
+    bspec = batch_pspec(shape.global_batch, mesh)
+    batch = input_specs(cfg, shape)
+    batch_sh = {k: NamedSharding(mesh, bspec) for k in batch}
+
+    t0 = time.time()
+    if shape.kind == "train":
+        # pick microbatches so per-replica microbatch seq tokens stay sane
+        mb = microbatches or _default_microbatches(arch, shape_name)
+        tc = TrainConfig(microbatches=mb, remat="full")
+        step = make_train_step(model, tc, param_shardings=p_sh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, opt_shardings, batch_sh),
+            out_shardings=(p_sh, opt_shardings, None),
+            donate_argnums=(0, 1),
+        )
+        with mesh:
+            lowered = jitted.lower(params_s, opt_s, batch)
+    elif shape.kind == "prefill":
+        # The primed decode cache is the step's dominant output; without an
+        # explicit out_sharding XLA materializes it replicated (hundreds of
+        # GiB/device at 32k).  cache_pspecs shards batch x data and a
+        # head/dim axis x model, and XLA back-propagates that into the
+        # per-layer K/V fill.
+        cache_s = cache_specs(model, shape)
+        c_specs = cache_pspecs(cache_s, mesh, shape.global_batch)
+        c_sh = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), c_specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        step = make_prefill_step(model)
+        jitted = jax.jit(
+            step, in_shardings=(p_sh, batch_sh), out_shardings=(None, c_sh)
+        )
+        with mesh:
+            lowered = jitted.lower(params_s, batch)
+    else:  # decode
+        cache_s = cache_specs(model, shape)
+        c_specs = cache_pspecs(cache_s, mesh, shape.global_batch)
+        c_sh = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), c_specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        # Serving-mode weight layout: TP-sharded over 'model' only, RESIDENT
+        # across the data axes.  FSDP sharding would re-all-gather every
+        # weight once per decoded token (measured 0.86 s/token of link time
+        # on command-r) — the paper's principle applied to serving: the hot
+        # working set stays in fast memory; only the KV stream pages.
+        serve_specs = param_pspecs(axes, params_s, mesh, fsdp=False, moe_2d=True)
+        serve_sh = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), serve_specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        step = make_decode_step(model)
+        jitted = jax.jit(
+            step,
+            in_shardings=(serve_sh, c_sh, NamedSharding(mesh, bspec)),
+            donate_argnums=(1,),
+        )
+        with mesh:
+            lowered = jitted.lower(params_s, cache_s, batch["tokens"])
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    for f in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        mem_d[f] = int(getattr(mem, f, 0) or 0)
+    cost = dict(compiled.cost_analysis() or {})
+    cost_d = {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    # ---- FLOP probe: unrolled, lower-only, unpartitioned (global) ----
+    # HloCostAnalysis counts a while body once, so the scanned artifact's
+    # cost is NOT the per-step cost.  The probe re-lowers the same step with
+    # the layer loop unrolled in Python (identical math, static windows) and
+    # reads cost_analysis() off the *lowered* module: exact global FLOPs.
+    t0 = time.time()
+    probe: dict = {}
+    try:
+        if shape.kind == "train":
+            ptc = TrainConfig(microbatches=1, remat=tc.remat)
+            pstep = make_train_step(pmodel, ptc, unroll=True)
+            plow = jax.jit(pstep).lower(params_s, opt_s, batch)
+        elif shape.kind == "prefill":
+            pstep = make_prefill_step(pmodel, unroll=True)
+            plow = jax.jit(pstep).lower(params_s, batch)
+        else:  # decode_step is already a python-unrolled layer loop
+            pstep = make_decode_step(pmodel)
+            plow = jax.jit(pstep).lower(params_s, cache_s, batch["tokens"])
+        pca = dict(plow.cost_analysis() or {})
+        probe = {
+            k: float(v) for k, v in pca.items() if isinstance(v, (int, float))
+        }
+        probe["probe_s"] = round(time.time() - t0, 2)
+    except Exception as e:  # pragma: no cover - probe is best-effort
+        probe = {"error": f"{type(e).__name__}: {e}"[:500]}
+
+    cfg_n = cfg.param_count()
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "devices": n_dev,
+        "kind": shape.kind,
+        "params": cfg_n,
+        "active_params": cfg.active_param_count(),
+        "tokens": shape.tokens,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem_d,
+        "cost": cost_d,
+        "probe": probe,
+        "collectives": coll,
+    }
+    return result
+
+
+def _default_microbatches(arch: str, shape_name: str) -> int:
+    """Keep per-step activation memory bounded for the big train cells."""
+    if shape_name != "train_4k":
+        return 1
+    big = {"qwen3-moe-235b-a22b": 8, "qwen2-vl-72b": 8, "dbrx-132b": 8,
+           "command-r-35b": 4}
+    return big.get(arch, 2)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["pod", "multipod"], default="pod")
+    ap.add_argument("--all", action="store_true", help="sweep every cell in subprocesses")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        from ..configs import cells
+
+        rc = 0
+        for arch, shape in cells():
+            for mesh in ("pod", "multipod"):
+                tag = f"{arch}__{shape}__{mesh}"
+                dst = out_dir / f"{tag}.json"
+                if dst.exists() and json.loads(dst.read_text()).get("status") in ("ok", "skipped"):
+                    print(f"[dryrun] {tag}: cached")
+                    continue
+                cmd = [
+                    sys.executable, "-m", "repro.launch.dryrun",
+                    "--arch", arch, "--shape", shape, "--mesh", mesh,
+                    "--out", str(out_dir),
+                ]
+                print(f"[dryrun] {tag}: compiling ...", flush=True)
+                r = subprocess.run(cmd, capture_output=True, text=True,
+                                   timeout=args.timeout)
+                if r.returncode != 0:
+                    rc = 1
+                    dst.write_text(json.dumps({
+                        "arch": arch, "shape": shape, "mesh": mesh,
+                        "status": "error", "stderr": r.stderr[-4000:],
+                    }, indent=1))
+                    print(f"[dryrun] {tag}: FAILED\n{r.stderr[-2000:]}")
+                else:
+                    print(r.stdout.strip().splitlines()[-1] if r.stdout else "")
+        return rc
+
+    assert args.arch and args.shape, "--arch and --shape required (or --all)"
+    try:
+        res = run_cell(
+            args.arch, args.shape, args.mesh == "multipod", args.microbatches
+        )
+    except Exception:
+        res = {
+            "arch": args.arch, "shape": args.shape,
+            "mesh": "2x16x16" if args.mesh == "multipod" else "16x16",
+            "status": "error", "error": traceback.format_exc()[-4000:],
+        }
+    tag = f"{args.arch}__{args.shape}__{args.mesh}"
+    (out_dir / f"{tag}.json").write_text(json.dumps(res, indent=1))
+    if res["status"] == "ok":
+        print(
+            f"[dryrun] {tag}: OK compile={res['compile_s']}s "
+            f"flops={res['cost'].get('flops', 0):.3e} "
+            f"coll={res['collectives']['total_bytes']:.3e}B "
+            f"temp={res['memory']['temp_size_in_bytes']/2**30:.2f}GiB"
+        )
+        return 0
+    if res["status"] == "skipped":
+        print(f"[dryrun] {tag}: SKIPPED ({res['reason']})")
+        return 0
+    print(f"[dryrun] {tag}: ERROR\n{res.get('error','')}")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,75 @@
+"""Recompute the unrolled FLOP probe for existing dry-run JSONs.
+
+The probe is mesh-independent (unpartitioned lower-only), so cells whose
+compiled artifact is still valid don't need a 256-device recompile when
+only the probe methodology changes (e.g. the fused-prefill unroll fix).
+Updates the ``probe`` field in place for every matching JSON.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+
+def probe_cell(arch: str, shape_name: str) -> dict:
+    import jax
+
+    from ..configs import SHAPES, TrainConfig, get_config
+    from ..models import build_model
+    from .specs import cache_specs, input_specs, state_specs
+    from .steps import make_decode_step, make_prefill_step, make_train_step
+
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    pmodel = build_model(cfg)
+    params_s, opt_s, _ = state_specs(pmodel)
+    batch = input_specs(cfg, shape)
+    t0 = time.time()
+    if shape.kind == "train":
+        step = make_train_step(pmodel, TrainConfig(microbatches=1, remat="full"),
+                               unroll=True)
+        plow = jax.jit(step).lower(params_s, opt_s, batch)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(pmodel, unroll=True)
+        plow = jax.jit(step).lower(params_s, batch)
+    else:
+        cache_s = cache_specs(pmodel, shape)
+        step = make_decode_step(pmodel)
+        plow = jax.jit(step).lower(params_s, cache_s, batch["tokens"])
+    pca = dict(plow.cost_analysis() or {})
+    probe = {k: float(v) for k, v in pca.items() if isinstance(v, (int, float))}
+    probe["probe_s"] = round(time.time() - t0, 2)
+    return probe
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    ap.add_argument("--kind", default="prefill", help="substring of shape name")
+    args = ap.parse_args()
+    d = Path(args.dryrun_dir)
+    cache: dict = {}
+    for f in sorted(d.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok" or args.kind not in rec["shape"]:
+            continue
+        key = (rec["arch"], rec["shape"])
+        if key not in cache:
+            print(f"[probe] {key[0]} x {key[1]} ...", flush=True)
+            try:
+                cache[key] = probe_cell(*key)
+            except Exception as e:
+                print(f"[probe] {key}: FAILED {e}")
+                continue
+        rec["probe"] = cache[key]
+        f.write_text(json.dumps(rec, indent=1))
+        print(f"[probe] {f.name}: flops={cache[key].get('flops', 0):.3e}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,72 @@
+"""Emit the EXPERIMENTS.md §Dry-run + §Roofline sections from artifacts."""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from ..configs import SHAPES, cell_is_skipped, list_archs
+from .roofline import analyze, roofline_terms
+
+HBM_GIB = 16  # v5e-class per-chip HBM
+
+
+def dryrun_table(d: Path, mesh: str) -> str:
+    rows = [
+        "| arch | shape | compile s | temp GiB/dev | fits 16G | coll GB/dev (link) | probe GFLOPs (global) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for arch in list_archs():
+        for shape in SHAPES:
+            f = d / f"{arch}__{shape}__{mesh}.json"
+            if not f.exists():
+                rows.append(f"| {arch} | {shape} | MISSING | | | | |")
+                continue
+            r = json.loads(f.read_text())
+            if r.get("status") == "skipped":
+                rows.append(
+                    f"| {arch} | {shape} | — skipped: {r['reason'][:40]} | | | | |"
+                )
+                continue
+            if r.get("status") != "ok":
+                rows.append(f"| {arch} | {shape} | ERROR | | | | |")
+                continue
+            temp = r["memory"]["temp_size_in_bytes"] / 2**30
+            args_b = r["memory"]["argument_size_in_bytes"] / 2**30
+            fits = "yes" if (temp + args_b) <= HBM_GIB else f"NO ({temp + args_b:.0f}G)"
+            link = r["collectives"].get("total_link_bytes", 0) / 1e9
+            fl = r.get("probe", {}).get("flops", 0) / 1e9
+            rows.append(
+                f"| {arch} | {shape} | {r['compile_s']:.0f} | {temp:.2f} | "
+                f"{fits} | {link:.1f} | {fl:,.0f} |"
+            )
+    return "\n".join(rows)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    d = Path(args.dryrun_dir)
+
+    print("### Dry-run, single-pod 16x16 (256 chips)\n")
+    print(dryrun_table(d, "pod"))
+    print("\n### Dry-run, multi-pod 2x16x16 (512 chips)\n")
+    print(dryrun_table(d, "multipod"))
+
+    print("\n### Roofline (single-pod)\n")
+    from .roofline import to_markdown, _HINTS
+
+    rows = analyze(str(d), "pod")
+    print(to_markdown(rows))
+    print()
+    for r in rows:
+        print(
+            f"* **{r['arch']} x {r['shape']}** — dominant: {r['dominant']}; "
+            f"{_HINTS[r['dominant']]}"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,66 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+``input_specs`` is the single source of truth for what each step function
+consumes — weak-type-correct, shardable, and allocation-free, so the
+multi-hundred-billion-parameter cells lower without touching device memory.
+Modality frontends are stubbed here per the assignment: whisper gets
+precomputed frame embeddings, qwen2-vl gets patch embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import Model
+from ..optim import adamw_init
+
+__all__ = ["input_specs", "state_specs", "cache_specs", "VISION_TOKENS"]
+
+VISION_TOKENS = 256  # stub patch-embedding length for the VLM frontend
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Batch specs for the step that ``shape.kind`` lowers."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": _sds((b, 1), jnp.int32)}
+    batch = {"tokens": _sds((b, s), jnp.int32)}
+    if shape.kind == "train":
+        batch["labels"] = _sds((b, s), jnp.int32)
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = _sds((b, VISION_TOKENS, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def state_specs(model: Model):
+    """(param specs, optimizer-state specs, logical axes) via eval_shape.
+
+    The logical-axes tree is static Python data assembled during tracing, so
+    it is captured via a side channel rather than traced through eval_shape.
+    """
+    box = {}
+
+    def init_params_only(key):
+        params, axes = model.init(key)
+        box["axes"] = axes
+        return params
+
+    params = jax.eval_shape(init_params_only, jax.random.key(0))
+    opt = jax.eval_shape(adamw_init, params)
+    return params, opt, box["axes"]
+
+
+def cache_specs(model: Model, shape: ShapeConfig):
+    """Decode-cache ShapeDtypeStructs for the given serving shape."""
+    return jax.eval_shape(
+        lambda: model.init_cache(
+            shape.global_batch, shape.seq_len, enc_len=shape.seq_len
+        )
+    )

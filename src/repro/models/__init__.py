@@ -1,0 +1,4 @@
+"""LM substrate: model families for the assigned architectures."""
+from .model import Model, build_model
+
+__all__ = ["Model", "build_model"]

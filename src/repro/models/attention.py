@@ -1,0 +1,231 @@
+"""Grouped-query attention: full-sequence (train/prefill) and cached decode.
+
+The decode path follows the SEM discipline from the paper (DESIGN.md §2):
+the O(1) query state stays in fast memory while the O(seq) KV cache is the
+streamed tier.  Sliding-window layers keep a *rotating* window-sized cache —
+the cache analogue of chunk skipping ("limit superfluous reads"): tokens
+outside the window are never fetched because they are never stored.
+
+The Pallas kernel in ``repro.kernels.decode_attn`` implements the same
+contract with explicit HBM->VMEM block streaming; this jnp path is the
+portable reference the dry-run lowers.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .flash import flash_attention, pick_chunk
+from .layers import apply_rope, rmsnorm
+from .param import Mk
+from .shard_ctx import constrain_heads, current_mesh
+
+__all__ = ["init_attention", "KVCache", "init_kv_cache", "attn_full", "attn_decode"]
+
+NEG_INF = -2.0e38
+
+# Above this many query rows the dense [B,H,S,T] score tensor is replaced by
+# the chunked online-softmax path (models/flash.py).  1024 keeps unit tests
+# on the exact dense path while every assigned shape (4k/32k/500k) streams.
+FLASH_MIN_SEQ = 1024
+
+
+def init_attention(mk: Mk, cfg: ModelConfig):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": mk.param((d, h, hd), ("embed", "heads", None)),
+        "wk": mk.param((d, kv, hd), ("embed", "kv", None)),
+        "wv": mk.param((d, kv, hd), ("embed", "kv", None)),
+        "wo": mk.param((h, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"w": mk.param((hd,), (None,), init="zeros")}
+        p["k_norm"] = {"w": mk.param((hd,), (None,), init="zeros")}
+    return p
+
+
+class KVCache(NamedTuple):
+    """Decode-time cache for ONE attention layer (or a stack if leading dims).
+
+    k/v: [B, T, kv_heads, head_dim] — T is the *window* for local layers.
+    pos: [B, T] int32 absolute positions stored in each slot (-1 = empty);
+      rotating writes make slot order irrelevant, masks use stored positions.
+    """
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    pos: jnp.ndarray
+
+
+def init_kv_cache(
+    batch: int, length: int, cfg: ModelConfig, dtype=jnp.bfloat16
+) -> KVCache:
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return KVCache(
+        k=jnp.zeros((batch, length, kv, hd), dtype),
+        v=jnp.zeros((batch, length, kv, hd), dtype),
+        pos=jnp.full((batch, length), -1, jnp.int32),
+    )
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"]["w"])
+        k = rmsnorm(k, p["k_norm"]["w"])
+    if cfg.pos == "rope":
+        sec = cfg.m_rope_sections
+        q = apply_rope(q, positions, cfg.rope_theta, sec)
+        k = apply_rope(k, positions, cfg.rope_theta, sec)
+    # One seq-gather per layer, chunk slices stay local (see shard_ctx).
+    return constrain_heads(q, k, v)
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """Grouped SDPA.  q: [B,S,H,hd]; k/v: [B,T,KV,hd]; mask: [B,S,T] or [S,T]."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, hd)
+    scores = jnp.einsum(
+        "bskgd,btkd->bkgst", qg, k, preferred_element_type=jnp.float32
+    ) * (hd**-0.5)
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, hd)
+
+
+def attn_full(
+    p,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    window=0,
+    causal: bool = True,
+) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill).  ``window>0`` = SWA
+    (``window`` may be a traced scalar — the scan-over-layers path passes
+    the per-layer window as scan data)."""
+    s = x.shape[1]
+    pos1d = positions[0] if cfg.m_rope_sections else positions
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    if s >= FLASH_MIN_SEQ:
+        out = flash_attention(
+            q,
+            k,
+            v,
+            pos1d,
+            pos1d,
+            jnp.asarray(window, jnp.int32),
+            causal,
+            cfg.head_dim**-0.5,
+            pick_chunk(s, 512),
+            pick_chunk(s, 1024),
+            current_mesh(),
+        )
+    else:
+        qp = pos1d[..., :, None]
+        kp = pos1d[..., None, :]
+        mask = (kp <= qp) if causal else jnp.ones((s, s), bool)
+        w = jnp.asarray(window, jnp.int32)
+        mask = mask & ((w == 0) | (kp > qp - w))
+        out = _sdpa(q, k, v, mask, cfg)
+    # heads-sharded, seq-full pre-projection state: its cotangent layout
+    # keeps dWo local per model shard (same argument as layers.mlp)
+    out, _, _ = constrain_heads(out, out, out)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def attn_decode(
+    p,
+    x: jnp.ndarray,
+    cache: KVCache,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    window: int = 0,
+) -> tuple[jnp.ndarray, KVCache]:
+    """One-token decode against the cache.
+
+    x: [B, 1, d]; positions: [B, 1] (or [3, B, 1] for M-RoPE) — the absolute
+    position of the new token.  The new KV lands at slot ``pos % T`` (full
+    cache: T >= max positions, so this is just ``pos``; window cache: rotating
+    overwrite, which *is* the paper's I/O-avoidance — evicted tokens are
+    unreachable by construction).
+    """
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    b, t = cache.pos.shape
+    pos1d = (positions[0] if cfg.m_rope_sections else positions)[:, 0]  # [B]
+    slot = (pos1d % t).astype(jnp.int32)
+
+    bidx = jnp.arange(b)
+    k = cache.k.at[bidx, slot].set(k_new[:, 0])
+    v = cache.v.at[bidx, slot].set(v_new[:, 0])
+    cpos = cache.pos.at[bidx, slot].set(pos1d)
+    # The decode cache shards head_dim x 'model' (kv heads rarely divide the
+    # TP axis).  Pin q the same way so the score/value contractions run as
+    # LOCAL hd-partials + a tiny psum — otherwise XLA re-all-gathers the
+    # whole K/V cache over 'model' every decoded token (measured 42.8
+    # GB/token/device on command-r decode_32k, ~1.07 GB x 40 layers).
+    from .shard_ctx import constrain
+
+    q = constrain(q, "dp", None, None, "model")
+    k = constrain(k, "dp", None, None, "model")
+    v = constrain(v, "dp", None, None, "model")
+
+    valid = cpos >= 0
+    if window:
+        valid = valid & (cpos > (pos1d[:, None] - window))
+    mask = valid[:, None, :]  # [B, 1, T]
+    out = _sdpa(q, k, v, mask, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, KVCache(k, v, cpos)
+
+
+def attn_cross(
+    p,
+    x: jnp.ndarray,
+    enc_k: jnp.ndarray,
+    enc_v: jnp.ndarray,
+    cfg: ModelConfig,
+) -> jnp.ndarray:
+    """Cross-attention over precomputed encoder K/V (whisper decoder)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q, _, _ = constrain_heads(q, q, q)
+    b, s = x.shape[:2]
+    t = enc_k.shape[1]
+    if s >= FLASH_MIN_SEQ or t >= FLASH_MIN_SEQ:
+        pos_q = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        pos_k = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+        out = flash_attention(
+            q,
+            enc_k,
+            enc_v,
+            pos_q,
+            pos_k,
+            jnp.zeros((), jnp.int32),
+            False,
+            cfg.head_dim**-0.5,
+            pick_chunk(s, 512),
+            pick_chunk(t, 1024),
+            current_mesh(),
+        )
+    else:
+        mask = jnp.ones((s, t), bool)
+        out = _sdpa(q, enc_k, enc_v, mask, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def project_kv(p, x_enc: jnp.ndarray, cfg: ModelConfig):
+    """Encoder-side K/V for cross attention (computed once per request)."""
+    k = jnp.einsum("bsd,dhk->bshk", x_enc, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x_enc, p["wv"])
+    _, k, v = constrain_heads(k, k, v)
+    return k, v

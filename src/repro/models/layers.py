@@ -1,0 +1,177 @@
+"""Shared neural-net building blocks (pure functional, bf16-by-default).
+
+Logical sharding axes used throughout (mapped to mesh axes by
+``repro.distributed.sharding``):
+
+  'vocab'   — embedding/unembedding vocabulary dim  -> tensor-parallel
+  'embed'   — the d_model dim                       -> FSDP (data)
+  'heads'   — attention heads / q projection        -> tensor-parallel
+  'kv'      — kv heads                              -> tensor-parallel
+  'ffn'     — MLP hidden dim                        -> tensor-parallel
+  'experts' — MoE expert dim                        -> expert-parallel
+  'inner'   — SSM inner dim                         -> tensor-parallel
+  'layers'  — scan-stacked layer dim                -> replicated
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .param import Annot, Mk
+
+__all__ = [
+    "rmsnorm",
+    "init_rmsnorm",
+    "init_mlp",
+    "mlp",
+    "init_embedding",
+    "embed",
+    "unembed",
+    "rope",
+    "apply_rope",
+]
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def init_rmsnorm(mk: Mk, d: int):
+    # Stored as (scale - 1) like gemma/llama so zeros-init is identity.
+    return {"w": mk.param((d,), ("embed",), init="zeros")}
+
+
+def init_mlp(mk: Mk, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    p = {
+        "up": mk.param((d, ff), ("embed", "ffn")),
+        "down": mk.param((ff, d), ("ffn", "embed")),
+    }
+    if cfg.gated_mlp:
+        p["gate"] = mk.param((d, ff), ("embed", "ffn"))
+    return p
+
+
+def _act(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+def mlp(p, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    from .shard_ctx import constrain
+
+    # Megatron TP discipline: the hidden is ff-sharded x model, seq FULL.
+    # The constraint's transpose pins the hidden's cotangent the same way,
+    # so each model shard computes only ITS dW slice — without it XLA
+    # computes full [d, ff] f32 partial dWs and all-reduces them over
+    # 'model' (measured 892 GB/step/device on command-r train).
+    def pin(h):
+        return constrain(h, "dp", None, "model") if h.ndim == 3 else h
+
+    # Pin the gemm INPUT full-seq too: its cotangent (dx) then comes back
+    # as one activation-sized all-reduce instead of XLA replicating the
+    # f32 weight to compute dx locally (weights >> activations here).
+    if x.ndim == 3:
+        x = constrain(x, "dp", None, None)
+    up = pin(jnp.einsum("...d,df->...f", x, p["up"]))
+    if cfg.gated_mlp:
+        gate = pin(jnp.einsum("...d,df->...f", x, p["gate"]))
+        h = _act(gate, cfg.act) * up
+    else:
+        h = _act(up, cfg.act)
+    return jnp.einsum("...f,fd->...d", h, p["down"])
+
+
+def init_embedding(mk: Mk, cfg: ModelConfig):
+    # d^-0.5 table init keeps tied-unembed logits O(1) at init (archs with
+    # embed_scale multiply inputs back up by sqrt(d), gemma-style).
+    p = {"table": mk.param(
+        (cfg.vocab_padded, cfg.d_model), ("vocab", "embed"),
+        scale=cfg.d_model**-0.5,
+    )}
+    if not cfg.tie_embeddings:
+        p["head"] = mk.param(
+            (cfg.d_model, cfg.vocab_padded),
+            ("embed", "vocab"),
+            scale=cfg.d_model**-0.5,
+        )
+    if cfg.pos == "learned":
+        p["pos"] = mk.param((cfg.max_pos, cfg.d_model), (None, "embed"), scale=0.02)
+    return p
+
+
+def embed(p, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = p["table"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(p, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    table = p["table"].T if cfg.tie_embeddings else p["head"]
+    logits = jnp.einsum(
+        "...d,dv->...v", x, table, preferred_element_type=jnp.float32
+    )
+    if cfg.vocab_padded > cfg.vocab:
+        # Padding columns (vocab rounded up for clean TP sharding) must
+        # never win the softmax/argmax.
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(iota < cfg.vocab, logits, -1e30)
+    return logits
+
+
+def rope(positions: jnp.ndarray, dim: int, theta: float) -> tuple:
+    """cos/sin tables for ``positions`` [..., S] -> [..., S, dim/2]."""
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    theta: float,
+    sections: tuple = (),
+) -> jnp.ndarray:
+    """Rotary embedding on [..., S, H, hd].
+
+    ``sections`` (pairs per section) enables qwen2-vl M-RoPE: ``positions``
+    is then [3, ..., S] (t/h/w) and each head-dim section rotates by its own
+    position stream.  Empty sections = standard 1D RoPE with positions
+    [..., S].
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., :half], xf[..., half:]
+    if sections:
+        assert sum(sections) == half, (sections, half)
+        cos_parts, sin_parts = [], []
+        for i, sec in enumerate(sections):
+            pos_i = positions[i]
+            lo = sum(sections[:i])
+            freqs = 1.0 / (
+                theta ** (jnp.arange(lo, lo + sec, dtype=jnp.float32) * 2 / hd)
+            )
+            ang = pos_i.astype(jnp.float32)[..., None] * freqs
+            cos_parts.append(jnp.cos(ang))
+            sin_parts.append(jnp.sin(ang))
+        cos = jnp.concatenate(cos_parts, -1)[..., None, :]
+        sin = jnp.concatenate(sin_parts, -1)[..., None, :]
+    else:
+        cos, sin = rope(positions, hd, theta)
+        cos, sin = cos[..., None, :], sin[..., None, :]  # broadcast over heads
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,207 @@
+"""Mamba2 (state-space duality / SSD) block — arXiv:2405.21060.
+
+Chunked SSD forward: within-chunk interactions use the quadratic (attention
+-like) form on the MXU; across chunks a linear recurrence carries the
+``[B, heads, head_dim, state]`` SSM state.  This is itself the SEM split
+(DESIGN.md §4): O(1)-per-token state lives in fast memory while token chunks
+stream through — the paper's discipline shows up *inside* the architecture.
+
+Decode is a single-token state update: O(state) work, no cache growth —
+which is why the SSM/hybrid archs run the ``long_500k`` shape.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .param import Mk
+
+__all__ = ["init_mamba2", "SSMCache", "init_ssm_cache", "mamba2_full", "mamba2_decode"]
+
+
+def init_mamba2(mk: Mk, cfg: ModelConfig):
+    d, di, n, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * n
+    return {
+        "in_proj": mk.param(
+            (d, 2 * di + 2 * n + nh), ("embed", "inner")
+        ),  # x, z, B, C, dt
+        "conv_w": mk.param((cfg.ssm_conv, conv_ch), (None, "inner"), scale=0.5),
+        "conv_b": mk.param((conv_ch,), ("inner",), init="zeros"),
+        "A_log": mk.param((nh,), (None,), init="ones"),
+        "D": mk.param((nh,), (None,), init="ones"),
+        "dt_bias": mk.param((nh,), (None,), init="zeros"),
+        "norm_w": mk.param((di,), ("inner",), init="zeros"),
+        "out_proj": mk.param((di, d), ("inner", "embed")),
+    }
+
+
+class SSMCache(NamedTuple):
+    """Decode state for one mamba2 layer: O(1) in sequence length."""
+
+    conv: jnp.ndarray  # [B, conv_k-1, di + 2n] trailing conv inputs
+    state: jnp.ndarray  # [B, heads, head_dim, state] SSM state (f32)
+
+
+def init_ssm_cache(batch: int, cfg: ModelConfig, dtype=jnp.bfloat16) -> SSMCache:
+    di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = di // nh
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * n), dtype),
+        state=jnp.zeros((batch, nh, hp, n), jnp.float32),
+    )
+
+
+def _split_proj(p, x, cfg: ModelConfig):
+    di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * n]
+    dt_raw = zxbcdt[..., 2 * di + 2 * n :]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(p, xbc: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Depthwise causal conv over the sequence dim, SiLU activation."""
+    k = cfg.ssm_conv
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * p["conv_w"][i][None, None, :]
+        for i in range(k)
+    )
+    return jax.nn.silu(out + p["conv_b"][None, None, :])
+
+
+def _gated_norm(y: jnp.ndarray, z: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    g = (y.astype(jnp.float32)) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(g * g, axis=-1, keepdims=True)
+    return (g * jax.lax.rsqrt(var + 1e-6) * (1.0 + w.astype(jnp.float32))).astype(
+        y.dtype
+    )
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """L[..., t, s] = sum_{s < k <= t} x[..., k]; -inf above the diagonal."""
+    t = x.shape[-1]
+    cum = jnp.cumsum(x, -1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba2_full(
+    p, x: jnp.ndarray, cfg: ModelConfig, return_state: bool = False
+):
+    """Chunked SSD over a full sequence. x: [B, S, d] — any S (padded
+    internally to a chunk multiple with identity transitions: dt = 0 at
+    padded positions means decay exp(0·A) = 1 and zero input, so the state
+    and real outputs are exact).
+
+    ``return_state=True`` also returns the :class:`SSMCache` after the last
+    token (for prefill -> decode handoff)."""
+    b, s, _ = x.shape
+    di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = di // nh
+    cl = min(cfg.ssm_chunk, s)
+    pad = (-s) % cl
+    s_real = s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // cl
+
+    z, xbc, dt_raw = _split_proj(p, x, cfg)
+    xbc = _causal_conv(p, xbc, cfg)
+    xin = xbc[..., :di].reshape(b, nc, cl, nh, hp)
+    B = xbc[..., di : di + n].reshape(b, nc, cl, n)
+    C = xbc[..., di + n :].reshape(b, nc, cl, n)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    ).reshape(b, nc, cl, nh)
+    if pad:
+        valid = (jnp.arange(s) < s_real).reshape(1, nc, cl, 1)
+        dt = dt * valid
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [nh]
+    dA = dt * A  # [b, nc, cl, nh]
+    cum = jnp.cumsum(dA, axis=2)  # [b, nc, cl, nh]
+
+    xdt = (xin.astype(jnp.float32)) * dt[..., None]  # effective input
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+
+    # ---- intra-chunk (quadratic / attention-like, MXU-friendly) ----
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, -1, 2)))  # [b, nc, nh, cl, cl]
+    scores = jnp.einsum("bctn,bcsn->bcts", Cf, Bf)  # [b, nc, t, s]
+    y_diag = jnp.einsum("bcts,bchts,bcshp->bcthp", scores, L, xdt)
+
+    # ---- chunk states + linear recurrence across chunks ----
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)  # [b, nc, cl, nh]
+    states = jnp.einsum("bcsn,bcshp,bcsh->bchpn", Bf, xdt, decay_out)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [b, nc, nh]
+
+    def scan_fn(h, inp):
+        st, dec = inp  # [b,h,p,n], [b,h]
+        h_new = h * dec[..., None, None] + st
+        return h_new, h  # emit state BEFORE this chunk
+
+    h0 = jnp.zeros((b, nh, hp, n), jnp.float32)
+    h_last, h_prev = jax.lax.scan(
+        scan_fn,
+        h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # [b, nc, nh, hp, n]
+
+    y_off = jnp.einsum("bctn,bchpn,bcth->bcthp", Cf, h_prev, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(b, s, nh, hp)
+    y = y + xin.reshape(b, s, nh, hp).astype(jnp.float32) * p["D"].astype(
+        jnp.float32
+    ).reshape(1, 1, nh, 1)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_w"])
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
+    if pad:
+        out = out[:, :s_real]
+    if not return_state:
+        return out
+    # Decode handoff: conv cache holds the last (k-1) RAW xbc inputs.
+    xbc_raw = _split_proj(p, x, cfg)[1]
+    conv_tail = xbc_raw[:, s_real - (cfg.ssm_conv - 1) : s_real, :]
+    return out, SSMCache(conv=conv_tail, state=h_last)
+
+
+def mamba2_decode(
+    p, x: jnp.ndarray, cache: SSMCache, cfg: ModelConfig
+) -> tuple[jnp.ndarray, SSMCache]:
+    """Single-token SSD step. x: [B, 1, d]."""
+    b = x.shape[0]
+    di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = di // nh
+
+    z, xbc, dt_raw = _split_proj(p, x, cfg)  # [b,1,...]
+    # conv over (cached k-1 inputs, new input)
+    hist = jnp.concatenate([cache.conv, xbc], axis=1)  # [b, k, ch]
+    conv_out = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    xbc1 = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = hist[:, 1:, :]
+
+    xin = xbc1[..., :di].reshape(b, nh, hp).astype(jnp.float32)
+    B = xbc1[..., di : di + n].reshape(b, n).astype(jnp.float32)
+    C = xbc1[..., di + n :].reshape(b, n).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # [b, nh]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)  # [b, nh]
+
+    # h' = exp(dt*A) h + (dt*x) B^T ;  y = C h' + D x
+    xdt = xin * dt[..., None]  # [b, nh, hp]
+    state = cache.state * dA[..., None, None] + jnp.einsum("bhp,bn->bhpn", xdt, B)
+    y = jnp.einsum("bhpn,bn->bhp", state, C)
+    y = y + xin * p["D"].astype(jnp.float32).reshape(1, nh, 1)
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_w"])
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
+    return out, SSMCache(conv=new_conv, state=state)

@@ -1,0 +1,906 @@
+"""Model assembly for every assigned architecture family.
+
+One :class:`Model` facade covers:
+  dense / vlm — pre-norm GQA transformer (optional SWA, local:global pattern,
+                M-RoPE, qk-norm, GeGLU/SwiGLU)
+  moe         — dense attention + top-k expert FFN
+  ssm         — mamba2 (SSD) stack
+  hybrid      — mamba2 stack + ONE shared attention+MLP block applied every
+                ``attn_every`` layers (zamba2)
+  encdec      — whisper-style encoder/decoder with cross attention
+
+Execution paths:
+  * ``forward``     — full-sequence logits (training), scan-over-layers.
+  * ``prefill``     — full sequence -> (last-token logits, decode cache).
+  * ``decode_step`` — one token against the cache; layers UNROLLED so each
+    layer's cache keeps its own length (window vs full — the SEM-style
+    "never fetch what you'll never need" memory layout).
+
+Init under ``jax.eval_shape`` builds shape-only params for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import (
+    KVCache,
+    attn_cross,
+    attn_decode,
+    attn_full,
+    init_attention,
+    init_kv_cache,
+    project_kv,
+)
+from .layers import embed, init_embedding, init_mlp, init_rmsnorm, mlp, rmsnorm, unembed
+from .mamba2 import SSMCache, init_mamba2, init_ssm_cache, mamba2_decode, mamba2_full
+from .moe import init_moe, moe_apply
+from .param import Mk, merge_axes, split
+
+__all__ = ["Model", "build_model"]
+
+
+def _init_stacked(fn, key, n: int):
+    """Stack values via vmap; derive axes from a single non-vmapped call."""
+    keys = jax.random.split(key, n)
+    one = fn(Mk(jax.random.key(0)))
+    _, axes = split(one)
+    vals = jax.vmap(lambda k: split(fn(Mk(k)))[0])(keys)
+    axes = merge_axes(axes, "layers")
+    return vals, axes
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        # Activation shardings (set by launchers via set_mesh; None in tests)
+        self._act_ns = None  # residual [B, S, D]: batch x DP, seq x model (SP)
+        self._act_ns_noseq = None  # fallback when S doesn't divide
+        self._logit_ns = None  # logits [B, S, V]: batch x DP, vocab x model
+        self._msize = 1
+
+    # ------------------------------------------------------- distribution
+    def set_mesh(self, mesh):
+        """Install activation sharding constraints for ``mesh``.
+
+        Residual activations are sharded batch x ('pod','data') and sequence
+        x 'model' (Megatron-style sequence parallelism): norms/elementwise
+        ops run fully sharded, XLA inserts all-gather before attention/MLP
+        and reduce-scatters back.  Critically this keeps the scan-carried /
+        remat-saved buffers sharded — without it the while-loop carries are
+        replicated per device (hundreds of GiB for the train cells).
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from ..distributed.sharding import data_axes
+
+        dp = data_axes(mesh)
+        dpe = dp if len(dp) > 1 else (dp[0] if dp else None)
+        self._mesh = mesh
+        self._msize = int(mesh.shape.get("model", 1))
+        self._act_ns = NamedSharding(mesh, P(dpe, "model", None))
+        self._act_ns_noseq = NamedSharding(mesh, P(dpe, None, None))
+        self._logit_ns = NamedSharding(mesh, P(dpe, None, "model"))
+        self._layer_ns = self._per_layer_shardings(mesh)
+        return self
+
+    def _per_layer_shardings(self, mesh):
+        """NamedSharding tree for ONE layer's param slice (stacked specs
+        minus the leading 'layers' dim).
+
+        Constraining the bp slice inside the scan body matters for the
+        BACKWARD pass: with_sharding_constraint's transpose applies the
+        same sharding to the cotangent, so per-layer weight gradients are
+        produced reduce-scattered instead of as full-tensor all-reduces
+        (XLA does not propagate the stacked ys sharding into the bwd scan
+        body on its own — measured 892 GB/step/device of f32 dW ARs).
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from ..distributed.sharding import param_pspecs
+
+        box = {}
+
+        def initp(k):
+            p, ax = self.init(k)
+            box["axes"] = ax
+            return p
+
+        shapes = jax.eval_shape(initp, jax.random.key(0))
+        specs = param_pspecs(box["axes"], shapes, mesh)
+        out = {}
+        for name in ("blocks", "encoder"):
+            if name in specs:
+                out[name] = jax.tree_util.tree_map(
+                    lambda s: NamedSharding(mesh, P(*tuple(s)[1:])),
+                    specs[name],
+                    is_leaf=lambda x: isinstance(x, P),
+                )
+        if "shared" in specs:
+            out["shared"] = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s),
+                specs["shared"],
+                is_leaf=lambda x: isinstance(x, P),
+            )
+        return out
+
+    def _constrain_bp(self, bp, which: str = "blocks"):
+        ns = getattr(self, "_layer_ns", None)
+        if not ns or which not in ns:
+            return bp
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, bp, ns[which]
+        )
+
+    def _scope(self):
+        """Ambient sharding scope for attention internals (no-op w/o mesh)."""
+        from .shard_ctx import shard_scope
+
+        return shard_scope(getattr(self, "_mesh", None))
+
+    def _constrain(self, x):
+        """Residual-stream constraint (no-op when no mesh is installed)."""
+        if self._act_ns is None or x.ndim != 3:
+            return x
+        b, s, _ = x.shape
+        if s > 1 and s % self._msize == 0:
+            return jax.lax.with_sharding_constraint(x, self._act_ns)
+        return jax.lax.with_sharding_constraint(x, self._act_ns_noseq)
+
+    def _constrain_logits(self, logits):
+        if self._logit_ns is None or logits.ndim != 3:
+            return logits
+        if logits.shape[-1] % self._msize == 0:
+            return jax.lax.with_sharding_constraint(logits, self._logit_ns)
+        return logits
+
+    # ------------------------------------------------------------- init
+    def init(self, key: jax.Array):
+        """Returns (params, logical_axes). Run under jax.eval_shape for the
+        dry-run (no allocation)."""
+        cfg = self.cfg
+        k_embed, k_blocks, k_extra = jax.random.split(key, 3)
+        params: dict = {}
+        axes: dict = {}
+
+        emb = init_embedding(Mk(k_embed), cfg)
+        params["embed"], axes["embed"] = split(emb)
+        fin = init_rmsnorm(Mk(k_extra), cfg.d_model)
+        params["final_norm"], axes["final_norm"] = split(fin)
+
+        if cfg.family in ("dense", "vlm", "moe"):
+            def block(mk: Mk):
+                b = {
+                    "ln1": init_rmsnorm(mk, cfg.d_model),
+                    "attn": init_attention(mk, cfg),
+                    "ln2": init_rmsnorm(mk, cfg.d_model),
+                }
+                if cfg.family == "moe":
+                    b["moe"] = init_moe(mk, cfg)
+                else:
+                    b["mlp"] = init_mlp(mk, cfg)
+                return b
+
+            params["blocks"], axes["blocks"] = _init_stacked(
+                block, k_blocks, cfg.n_layers
+            )
+        elif cfg.family == "ssm":
+            def block(mk: Mk):
+                return {"ln": init_rmsnorm(mk, cfg.d_model), "ssm": init_mamba2(mk, cfg)}
+
+            params["blocks"], axes["blocks"] = _init_stacked(
+                block, k_blocks, cfg.n_layers
+            )
+        elif cfg.family == "hybrid":
+            def block(mk: Mk):
+                return {"ln": init_rmsnorm(mk, cfg.d_model), "ssm": init_mamba2(mk, cfg)}
+
+            params["blocks"], axes["blocks"] = _init_stacked(
+                block, k_blocks, cfg.n_layers
+            )
+            shared = {
+                "ln1": init_rmsnorm(Mk(k_extra), cfg.d_model),
+                "attn": init_attention(Mk(jax.random.fold_in(k_extra, 1)), cfg),
+                "ln2": init_rmsnorm(Mk(jax.random.fold_in(k_extra, 2)), cfg.d_model),
+                "mlp": init_mlp(Mk(jax.random.fold_in(k_extra, 3)), cfg),
+            }
+            params["shared"], axes["shared"] = split(shared)
+        elif cfg.family == "encdec":
+            def enc_block(mk: Mk):
+                return {
+                    "ln1": init_rmsnorm(mk, cfg.d_model),
+                    "attn": init_attention(mk, cfg),
+                    "ln2": init_rmsnorm(mk, cfg.d_model),
+                    "mlp": init_mlp(mk, cfg),
+                }
+
+            def dec_block(mk: Mk):
+                return {
+                    "ln1": init_rmsnorm(mk, cfg.d_model),
+                    "self_attn": init_attention(mk, cfg),
+                    "ln_x": init_rmsnorm(mk, cfg.d_model),
+                    "cross_attn": init_attention(mk, cfg),
+                    "ln2": init_rmsnorm(mk, cfg.d_model),
+                    "mlp": init_mlp(mk, cfg),
+                }
+
+            params["encoder"], axes["encoder"] = _init_stacked(
+                enc_block, k_blocks, cfg.encoder_layers
+            )
+            params["blocks"], axes["blocks"] = _init_stacked(
+                dec_block, jax.random.fold_in(k_blocks, 7), cfg.n_layers
+            )
+            enc_norm = init_rmsnorm(Mk(jax.random.fold_in(k_extra, 9)), cfg.d_model)
+            params["enc_norm"], axes["enc_norm"] = split(enc_norm)
+        else:
+            raise ValueError(cfg.family)
+        return params, axes
+
+    # ------------------------------------------------- layer windows
+    def layer_windows(self) -> list:
+        """Per-layer sliding window (0 = full attention). Static python ints."""
+        cfg = self.cfg
+        w = []
+        for l in range(cfg.n_layers):
+            if cfg.sliding_window == 0:
+                w.append(0)
+            elif cfg.local_global_pattern:
+                period = cfg.local_global_pattern + 1
+                w.append(0 if (l + 1) % period == 0 else cfg.sliding_window)
+            else:
+                w.append(cfg.sliding_window)
+        return w
+
+    # ------------------------------------------------------------ forward
+    def forward(
+        self,
+        params,
+        batch: dict,
+        *,
+        remat: str = "none",
+        unroll: bool = False,
+        return_hidden: bool = False,
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Full-sequence logits. Returns (logits [B,S,V] f32, aux_loss).
+
+        ``unroll=True`` replaces the layer scan with a *Python* loop whose
+        per-layer windows / attn-placement are static — used by the dry-run's
+        flop probe so ``lowered.cost_analysis()`` counts every layer exactly
+        (a scanned while body is counted once by HloCostAnalysis)."""
+        with self._scope():
+            return self._forward_impl(
+                params, batch, remat=remat, unroll=unroll,
+                return_hidden=return_hidden,
+            )
+
+    def _forward_impl(
+        self,
+        params,
+        batch: dict,
+        *,
+        remat: str = "none",
+        unroll: bool = False,
+        return_hidden: bool = False,
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        x = self._constrain(x)
+        aux = jnp.zeros((), jnp.float32)
+
+        if cfg.family in ("dense", "vlm", "moe"):
+            win_static = self.layer_windows()
+
+            def layer(x, aux, bp, window):
+                bp = self._constrain_bp(bp)
+                h = rmsnorm(x, bp["ln1"]["w"])
+                h = attn_full(bp["attn"], h, cfg, positions, window=window)
+                x = x + h
+                h = rmsnorm(x, bp["ln2"]["w"])
+                if cfg.family == "moe":
+                    h, a = moe_apply(bp["moe"], h, cfg)
+                    aux = aux + a
+                else:
+                    h = mlp(bp["mlp"], h, cfg)
+                return self._constrain(x + h), aux
+
+            if unroll:
+                layer = _maybe_remat(layer, remat, static_argnums=(3,))
+                for l in range(cfg.n_layers):
+                    bp = jax.tree_util.tree_map(lambda a: a[l], params["blocks"])
+                    x, aux = layer(x, aux, bp, win_static[l])
+            else:
+                def body(carry, xs):
+                    x, aux = carry
+                    bp, window = xs
+                    return layer(x, aux, bp, window), None
+
+                body = _maybe_remat(body, remat)
+                (x, aux), _ = jax.lax.scan(
+                    body,
+                    (x, aux),
+                    (params["blocks"], jnp.asarray(win_static, jnp.int32)),
+                )
+        elif cfg.family == "ssm":
+            def layer(x, bp):
+                bp = self._constrain_bp(bp)
+                h = rmsnorm(x, bp["ln"]["w"])
+                return self._constrain(x + mamba2_full(bp["ssm"], h, cfg))
+
+            if unroll:
+                layer = _maybe_remat(layer, remat)
+                for l in range(cfg.n_layers):
+                    bp = jax.tree_util.tree_map(lambda a: a[l], params["blocks"])
+                    x = layer(x, bp)
+            else:
+                body = _maybe_remat(lambda x, bp: (layer(x, bp), None), remat)
+                x, _ = jax.lax.scan(body, x, params["blocks"])
+        elif cfg.family == "hybrid":
+            every = cfg.attn_every
+            shared = self._constrain_bp(params["shared"], "shared")
+
+            def shared_attn(x):
+                h = rmsnorm(x, shared["ln1"]["w"])
+                x = x + attn_full(shared["attn"], h, cfg, positions)
+                h = rmsnorm(x, shared["ln2"]["w"])
+                return self._constrain(x + mlp(shared["mlp"], h, cfg))
+
+            def ssm_layer(x, bp):
+                bp = self._constrain_bp(bp)
+                h = rmsnorm(x, bp["ln"]["w"])
+                return self._constrain(x + mamba2_full(bp["ssm"], h, cfg))
+
+            if unroll:
+                ssm_layer_r = _maybe_remat(ssm_layer, remat)
+                shared_attn_r = _maybe_remat(shared_attn, remat)
+                for l in range(cfg.n_layers):
+                    bp = jax.tree_util.tree_map(lambda a: a[l], params["blocks"])
+                    x = ssm_layer_r(x, bp)
+                    if (l + 1) % every == 0:
+                        x = shared_attn_r(x)
+            else:
+                def body(carry, xs):
+                    x, = carry
+                    bp, idx = xs
+                    x = ssm_layer(x, bp)
+                    x = jax.lax.cond(
+                        (idx + 1) % every == 0, shared_attn, lambda x: x, x
+                    )
+                    return (x,), None
+
+                body = _maybe_remat(body, remat)
+                (x,), _ = jax.lax.scan(
+                    body, (x,), (params["blocks"], jnp.arange(cfg.n_layers))
+                )
+        elif cfg.family == "encdec":
+            enc_out = self.encode(params, batch, unroll=unroll)
+            x, _ = self._embed_decoder(params, batch)
+            positions = _default_positions(batch["tokens"])
+
+            def layer(x, bp):
+                bp = self._constrain_bp(bp)
+                h = rmsnorm(x, bp["ln1"]["w"])
+                x = x + attn_full(bp["self_attn"], h, cfg, positions)
+                h = rmsnorm(x, bp["ln_x"]["w"])
+                ek, ev = project_kv(bp["cross_attn"], enc_out, cfg)
+                x = x + attn_cross(bp["cross_attn"], h, ek, ev, cfg)
+                h = rmsnorm(x, bp["ln2"]["w"])
+                return self._constrain(x + mlp(bp["mlp"], h, cfg))
+
+            if unroll:
+                layer = _maybe_remat(layer, remat)
+                for l in range(cfg.n_layers):
+                    bp = jax.tree_util.tree_map(lambda a: a[l], params["blocks"])
+                    x = layer(x, bp)
+            else:
+                body = _maybe_remat(lambda x, bp: (layer(x, bp), None), remat)
+                x, _ = jax.lax.scan(body, x, params["blocks"])
+        else:
+            raise ValueError(cfg.family)
+
+        x = rmsnorm(x, params["final_norm"]["w"])
+        if return_hidden:
+            return x, aux
+        logits = self._constrain_logits(unembed(params["embed"], x, cfg))
+        return logits, aux
+
+    # ------------------------------------------------------------ encoder
+    def encode(self, params, batch: dict, unroll: bool = False) -> jnp.ndarray:
+        """Whisper encoder over stubbed frame embeddings [B, S, d]."""
+        cfg = self.cfg
+        x = batch["frames"].astype(jnp.bfloat16)
+        if cfg.pos == "learned":
+            s = x.shape[1]
+            x = x + params["embed"]["pos"][:s][None]
+        positions = jnp.broadcast_to(
+            jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2]
+        )
+
+        def layer(x, bp):
+            bp = self._constrain_bp(bp, "encoder")
+            h = rmsnorm(x, bp["ln1"]["w"])
+            x = x + attn_full(bp["attn"], h, cfg, positions, causal=False)
+            h = rmsnorm(x, bp["ln2"]["w"])
+            return self._constrain(x + mlp(bp["mlp"], h, cfg))
+
+        if unroll:
+            for l in range(cfg.encoder_layers):
+                bp = jax.tree_util.tree_map(lambda a: a[l], params["encoder"])
+                x = layer(x, bp)
+        else:
+            x, _ = jax.lax.scan(
+                lambda x, bp: (layer(x, bp), None), x, params["encoder"]
+            )
+        return rmsnorm(x, params["enc_norm"]["w"])
+
+    # ------------------------------------------------------------ caches
+    def init_cache(self, batch: int, max_len: int, enc_len: int = 0):
+        """Shape skeleton of the decode cache (run under eval_shape for the
+        dry-run).  Per-layer lengths honor each layer's window."""
+        cfg = self.cfg
+        caches = []
+        if cfg.family in ("dense", "vlm", "moe"):
+            for w in self.layer_windows():
+                length = min(w, max_len) if w else max_len
+                caches.append(init_kv_cache(batch, length, cfg))
+        elif cfg.family == "ssm":
+            caches = [init_ssm_cache(batch, cfg) for _ in range(cfg.n_layers)]
+        elif cfg.family == "hybrid":
+            for l in range(cfg.n_layers):
+                entry = {"ssm": init_ssm_cache(batch, cfg)}
+                if (l + 1) % cfg.attn_every == 0:
+                    entry["attn"] = init_kv_cache(batch, max_len, cfg)
+                caches.append(entry)
+        elif cfg.family == "encdec":
+            for _ in range(cfg.n_layers):
+                caches.append(
+                    {
+                        "self": init_kv_cache(batch, max_len, cfg),
+                        "cross_k": jnp.zeros(
+                            (batch, enc_len, cfg.n_kv_heads, cfg.head_dim),
+                            jnp.bfloat16,
+                        ),
+                        "cross_v": jnp.zeros(
+                            (batch, enc_len, cfg.n_kv_heads, cfg.head_dim),
+                            jnp.bfloat16,
+                        ),
+                    }
+                )
+        return {"layers": tuple(caches), "len": jnp.zeros((), jnp.int32)}
+
+    # ------------------------------------------------------------ decode
+    def decode_step(self, params, cache, tokens: jnp.ndarray):
+        """One new token per sequence. tokens: [B, 1] -> (logits [B,V], cache)."""
+        with self._scope():
+            return self._decode_step_impl(params, cache, tokens)
+
+    def _decode_step_impl(self, params, cache, tokens: jnp.ndarray):
+        cfg = self.cfg
+        pos_scalar = cache["len"]
+        b = tokens.shape[0]
+        positions = jnp.broadcast_to(pos_scalar[None, None], (b, 1)).astype(jnp.int32)
+        if cfg.m_rope_sections:
+            positions = jnp.broadcast_to(positions[None], (3, b, 1))
+
+        x = embed(params["embed"], tokens, cfg)
+        if cfg.pos == "learned":
+            x = x + params["embed"]["pos"][pos_scalar][None, None]
+
+        new_layers = []
+        windows = (
+            self.layer_windows()
+            if cfg.family in ("dense", "vlm", "moe")
+            else None
+        )
+        for l in range(cfg.n_layers):
+            bp = jax.tree_util.tree_map(lambda a: a[l], params["blocks"])
+            lc = cache["layers"][l]
+            if cfg.family in ("dense", "vlm", "moe"):
+                h = rmsnorm(x, bp["ln1"]["w"])
+                h, lc = attn_decode(bp["attn"], h, lc, cfg, positions, windows[l])
+                x = x + h
+                h = rmsnorm(x, bp["ln2"]["w"])
+                if cfg.family == "moe":
+                    h, _ = moe_apply(bp["moe"], h, cfg)
+                else:
+                    h = mlp(bp["mlp"], h, cfg)
+                x = x + h
+            elif cfg.family == "ssm":
+                h = rmsnorm(x, bp["ln"]["w"])
+                h, lc = mamba2_decode(bp["ssm"], h, lc, cfg)
+                x = x + h
+            elif cfg.family == "hybrid":
+                h = rmsnorm(x, bp["ln"]["w"])
+                h, ssm_c = mamba2_decode(bp["ssm"], h, lc["ssm"], cfg)
+                x = x + h
+                lc = dict(lc)
+                lc["ssm"] = ssm_c
+                if "attn" in lc:
+                    shared = params["shared"]
+                    h = rmsnorm(x, shared["ln1"]["w"])
+                    h, attn_c = attn_decode(shared["attn"], h, lc["attn"], cfg, positions)
+                    x = x + h
+                    h = rmsnorm(x, shared["ln2"]["w"])
+                    x = x + mlp(shared["mlp"], h, cfg)
+                    lc["attn"] = attn_c
+            elif cfg.family == "encdec":
+                h = rmsnorm(x, bp["ln1"]["w"])
+                h, self_c = attn_decode(bp["self_attn"], h, lc["self"], cfg, positions)
+                x = x + h
+                h = rmsnorm(x, bp["ln_x"]["w"])
+                x = x + attn_cross(
+                    bp["cross_attn"], h, lc["cross_k"], lc["cross_v"], cfg
+                )
+                h = rmsnorm(x, bp["ln2"]["w"])
+                x = x + mlp(bp["mlp"], h, cfg)
+                lc = dict(lc)
+                lc["self"] = self_c
+            new_layers.append(lc)
+
+        x = rmsnorm(x, params["final_norm"]["w"])
+        logits = unembed(params["embed"], x[:, 0], cfg)
+        return logits, {"layers": tuple(new_layers), "len": pos_scalar + 1}
+
+    # ------------------------------------------------------------ prefill
+    def prefill(self, params, batch: dict, unroll: bool = False, max_len=None):
+        """Full-sequence pass returning (last-token logits, primed cache).
+
+        ``max_len`` sizes the decode cache (default: exactly the prompt
+        length — a FULL cache whose next write rotates out position 0;
+        serving passes prompt + generation budget so slots are free)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        max_len = max_len or s
+        if cfg.family in ("dense", "vlm", "moe"):
+            # Fused path: K/V emitted as scan outputs of the SAME forward
+            # pass.  The alternative (a python re-projection loop over
+            # n_layers) keeps ~n_layers transient K/V buffers live and
+            # needs 146 GiB/device on the qwen3 prefill cell.
+            with self._scope():
+                return self._prefill_fused(params, batch, max_len, unroll)
+        if cfg.family in ("ssm", "hybrid"):
+            with self._scope():
+                return self._prefill_fused_ssm(params, batch, max_len, unroll)
+        # Unembed ONLY the last position: the full [B, S, V] f32 logits
+        # tensor is the single largest prefill buffer (13+ GiB/device for
+        # whisper at 32k) and serving never reads positions < S-1.
+        hidden, _ = self.forward(params, batch, unroll=unroll, return_hidden=True)
+        logits = unembed(params["embed"], hidden[:, -1], cfg)
+        cache = self.init_cache(
+            b, max_len, enc_len=batch.get("frames", tokens).shape[1]
+        )
+        # Prime: run the cheap projections layer by layer to fill K/V + state.
+        with self._scope():
+            cache = self._prime_cache(params, batch, cache)
+        return logits, cache
+
+    @staticmethod
+    def _cache_layout(k, v, pos, t_alloc: int, s: int):
+        """Lay the (tail of the) prefilled K/V into a t_alloc-slot rotating
+        cache honoring the slot == pos %% t_alloc invariant decode relies
+        on for eviction.  Fast path: identity when t_alloc == s."""
+        if t_alloc == s:
+            return KVCache(k=k, v=v, pos=pos)
+        b = k.shape[0]
+        keep = min(s, t_alloc)
+        k_t, v_t, p_t = k[:, s - keep :], v[:, s - keep :], pos[:, s - keep :]
+        slots = (p_t % t_alloc).astype(jnp.int32)
+        bidx = jnp.arange(b)[:, None]
+        k_buf = jnp.zeros((b, t_alloc) + k.shape[2:], k.dtype)
+        v_buf = jnp.zeros((b, t_alloc) + v.shape[2:], v.dtype)
+        p_buf = jnp.full((b, t_alloc), -1, jnp.int32)
+        return KVCache(
+            k=k_buf.at[bidx, slots].set(k_t),
+            v=v_buf.at[bidx, slots].set(v_t),
+            pos=p_buf.at[bidx, slots].set(p_t),
+        )
+
+    def _prefill_fused(self, params, batch: dict, max_len: int,
+                       unroll: bool = False):
+        """dense/vlm/moe prefill: one scan computing logits AND the cache.
+
+        Per-layer K/V ride out as scan ys; window layers keep only their
+        last ``w`` positions, laid out in rotating-slot order
+        (slot == pos % T) so subsequent decode writes evict the true
+        oldest entry.
+        """
+        from .attention import _project_qkv
+        from .flash import flash_attention, pick_chunk
+        from .shard_ctx import current_mesh
+
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x, positions = self._embed_inputs(params, batch)
+        x = self._constrain(x)
+        pos1d = positions[0] if cfg.m_rope_sections else positions
+        win_static = self.layer_windows()
+        windows = jnp.asarray(win_static, jnp.int32)
+        mesh = current_mesh()
+
+        def body(carry, xs):
+            x, = carry
+            bp, window = xs
+            bp = self._constrain_bp(bp)
+            h = rmsnorm(x, bp["ln1"]["w"])
+            q, k, v = _project_qkv(bp["attn"], h, cfg, positions)
+            if s >= 1024:
+                out = flash_attention(
+                    q, k, v, pos1d, pos1d, window, True,
+                    cfg.head_dim**-0.5, pick_chunk(s, 512),
+                    pick_chunk(s, 1024), mesh,
+                )
+            else:
+                from .attention import _sdpa
+
+                qp = pos1d[..., :, None]
+                kp = pos1d[..., None, :]
+                mask = (kp <= qp) & ((window == 0) | (kp > qp - window))
+                out = _sdpa(q, k, v, mask, cfg)
+            x = x + jnp.einsum("bshk,hkd->bsd", out, bp["attn"]["wo"])
+            h = rmsnorm(x, bp["ln2"]["w"])
+            if cfg.family == "moe":
+                hh, _ = moe_apply(bp["moe"], h, cfg)
+            else:
+                hh = mlp(bp["mlp"], h, cfg)
+            return (self._constrain(x + hh),), (
+                k.astype(jnp.bfloat16),
+                v.astype(jnp.bfloat16),
+            )
+
+        if unroll:  # flop-probe path: every layer visible to cost_analysis
+            ks_l, vs_l = [], []
+            for l in range(cfg.n_layers):
+                bp = jax.tree_util.tree_map(lambda a: a[l], params["blocks"])
+                (x,), (k_l, v_l) = body((x,), (bp, windows[l]))
+                ks_l.append(k_l)
+                vs_l.append(v_l)
+            ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+        else:
+            (x,), (ks, vs) = jax.lax.scan(
+                body, (x,), (params["blocks"], windows)
+            )
+        x = rmsnorm(x, params["final_norm"]["w"])
+        logits = unembed(params["embed"], x[:, -1], cfg)
+
+        layers = tuple(
+            self._cache_layout(
+                ks[l], vs[l], pos1d,
+                min(w, max_len) if w else max_len, s,
+            )
+            for l, w in enumerate(win_static)
+        )
+        return logits, {
+            "layers": layers,
+            "len": jnp.asarray(s, jnp.int32),
+        }
+
+    def _prefill_fused_ssm(self, params, batch: dict, max_len: int,
+                           unroll: bool = False):
+        """ssm/hybrid prefill: states (and, for hybrid, shared-attn K/V)
+        emitted as scan ys instead of a per-layer python re-run."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x, positions = self._embed_inputs(params, batch)
+        x = self._constrain(x)
+        pos1d = positions[0] if cfg.m_rope_sections else positions
+
+        if cfg.family == "ssm":
+            def body(carry, bp):
+                x, = carry
+                bp = self._constrain_bp(bp)
+                h = rmsnorm(x, bp["ln"]["w"])
+                y, st = mamba2_full(bp["ssm"], h, cfg, return_state=True)
+                return (self._constrain(x + y),), st
+
+            if unroll:
+                sts = []
+                for l in range(cfg.n_layers):
+                    bp = jax.tree_util.tree_map(lambda a: a[l], params["blocks"])
+                    (x,), st = body((x,), bp)
+                    sts.append(st)
+                states = jax.tree_util.tree_map(
+                    lambda *a: jnp.stack(a), *sts
+                )
+            else:
+                (x,), states = jax.lax.scan(body, (x,), params["blocks"])
+            layers = tuple(
+                jax.tree_util.tree_map(lambda a: a[l], states)
+                for l in range(cfg.n_layers)
+            )
+        else:  # hybrid: every attn_every-th layer also caches shared-attn KV
+            every = cfg.attn_every
+            shared = self._constrain_bp(params["shared"], "shared")
+            from .attention import _project_qkv
+
+            kv, hd = cfg.n_kv_heads, cfg.head_dim
+
+            def body(carry, xs):
+                x, = carry
+                bp, idx = xs
+                bp = self._constrain_bp(bp)
+                h = rmsnorm(x, bp["ln"]["w"])
+                y, st = mamba2_full(bp["ssm"], h, cfg, return_state=True)
+                x = x + y
+
+                def with_attn(x):
+                    h = rmsnorm(x, shared["ln1"]["w"])
+                    _, k, v = _project_qkv(shared["attn"], h, cfg, positions)
+                    x = x + attn_full(shared["attn"], h, cfg, positions)
+                    h2 = rmsnorm(x, shared["ln2"]["w"])
+                    return self._constrain(x + mlp(shared["mlp"], h2, cfg)), k, v
+
+                def no_attn(x):
+                    z = jnp.zeros((b, s, kv, hd), jnp.bfloat16)
+                    return self._constrain(x), z, z
+
+                x, k, v = jax.lax.cond((idx + 1) % every == 0, with_attn, no_attn, x)
+                return (x,), (st, k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+
+            if unroll:
+                sts, ks_l, vs_l = [], [], []
+                for l in range(cfg.n_layers):
+                    bp = jax.tree_util.tree_map(lambda a: a[l], params["blocks"])
+                    (x,), (st, k_l, v_l) = body((x,), (bp, jnp.asarray(l)))
+                    sts.append(st)
+                    ks_l.append(k_l)
+                    vs_l.append(v_l)
+                states = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *sts)
+                ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+            else:
+                (x,), (states, ks, vs) = jax.lax.scan(
+                    body, (x,), (params["blocks"], jnp.arange(cfg.n_layers))
+                )
+            layers = []
+            for l in range(cfg.n_layers):
+                entry = {"ssm": jax.tree_util.tree_map(lambda a: a[l], states)}
+                if (l + 1) % every == 0:
+                    entry["attn"] = self._cache_layout(
+                        ks[l], vs[l], pos1d, max_len, s
+                    )
+                layers.append(entry)
+            layers = tuple(layers)
+
+        x = rmsnorm(x, params["final_norm"]["w"])
+        logits = unembed(params["embed"], x[:, -1], cfg)
+        return logits, {"layers": layers, "len": jnp.asarray(s, jnp.int32)}
+
+    def _prime_cache(self, params, batch, cache):
+        """Recompute per-layer K/V (and SSM states) to populate the cache.
+
+        Full fidelity priming re-runs the block stack; for the serving path
+        this is fused into forward — here we keep it separate and simple
+        (the dry-run lowers decode_step and prefill independently).
+        """
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        pos1d = positions[0] if cfg.m_rope_sections else positions
+        b, s = pos1d.shape
+        layers = list(cache["layers"])
+
+        def fill_kv(p_attn, h, lc: KVCache, window: int):
+            from .attention import _project_qkv  # late import, shared code
+
+            _, k, v = _project_qkv(p_attn, h, cfg, positions)
+            t = lc.pos.shape[1]
+            take = min(t, s)
+            slots = (pos1d[:, s - take :] % t).astype(jnp.int32)
+            bidx = jnp.arange(b)[:, None]
+            return KVCache(
+                k=lc.k.at[bidx, slots].set(k[:, s - take :]),
+                v=lc.v.at[bidx, slots].set(v[:, s - take :]),
+                pos=lc.pos.at[bidx, slots].set(pos1d[:, s - take :]),
+            )
+
+        windows = (
+            self.layer_windows()
+            if cfg.family in ("dense", "vlm", "moe")
+            else None
+        )
+        for l in range(cfg.n_layers):
+            bp = jax.tree_util.tree_map(lambda a: a[l], params["blocks"])
+            lc = layers[l]
+            if cfg.family in ("dense", "vlm", "moe"):
+                h = rmsnorm(x, bp["ln1"]["w"])
+                lc = fill_kv(bp["attn"], h, lc, windows[l])
+                x = x + attn_full(bp["attn"], h, cfg, positions, windows[l])
+                h = rmsnorm(x, bp["ln2"]["w"])
+                if cfg.family == "moe":
+                    hh, _ = moe_apply(bp["moe"], h, cfg)
+                else:
+                    hh = mlp(bp["mlp"], h, cfg)
+                x = self._constrain(x + hh)
+            elif cfg.family == "ssm":
+                h = rmsnorm(x, bp["ln"]["w"])
+                y, st = mamba2_full(bp["ssm"], h, cfg, return_state=True)
+                x = x + y
+                lc = st
+            elif cfg.family == "hybrid":
+                h = rmsnorm(x, bp["ln"]["w"])
+                y, st = mamba2_full(bp["ssm"], h, cfg, return_state=True)
+                x = x + y
+                lc = dict(lc)
+                lc["ssm"] = st
+                if "attn" in lc:
+                    shared = params["shared"]
+                    h = rmsnorm(x, shared["ln1"]["w"])
+                    lc["attn"] = fill_kv(shared["attn"], h, lc["attn"], 0)
+                    x = x + attn_full(shared["attn"], h, cfg, positions)
+                    h = rmsnorm(x, shared["ln2"]["w"])
+                    x = x + mlp(shared["mlp"], h, cfg)
+            elif cfg.family == "encdec":
+                if l == 0:
+                    enc_out = self.encode(params, batch)
+                    x, _ = self._embed_decoder(params, batch)
+                h = rmsnorm(x, bp["ln1"]["w"])
+                lc = dict(lc)
+                lc["self"] = fill_kv(bp["self_attn"], h, lc["self"], 0)
+                x = x + attn_full(bp["self_attn"], h, cfg, positions)
+                h = rmsnorm(x, bp["ln_x"]["w"])
+                ek, ev = project_kv(bp["cross_attn"], enc_out, cfg)
+                lc["cross_k"], lc["cross_v"] = ek, ev
+                x = x + attn_cross(bp["cross_attn"], h, ek, ev, cfg)
+                h = rmsnorm(x, bp["ln2"]["w"])
+                x = x + mlp(bp["mlp"], h, cfg)
+            layers[l] = lc
+        return {"layers": tuple(layers), "len": jnp.asarray(s, jnp.int32)}
+
+    # ------------------------------------------------------------ helpers
+    def _embed_inputs(self, params, batch: dict):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        if cfg.family == "encdec":
+            # forward() for encdec re-embeds the decoder side itself
+            return self._embed_decoder(params, batch)[0], _default_positions(tokens)
+        x = embed(params["embed"], tokens, cfg)
+        if cfg.family == "vlm" and "vision_embeds" in batch:
+            ve = batch["vision_embeds"].astype(x.dtype)
+            nv = ve.shape[1]
+            x = jnp.concatenate([ve, x[:, nv:]], axis=1)
+        positions = batch.get("positions")
+        if positions is None:
+            positions = _default_positions(tokens)
+            if cfg.m_rope_sections:
+                positions = jnp.broadcast_to(
+                    positions[None], (3,) + tuple(positions.shape)
+                )
+        if cfg.pos == "learned":
+            x = x + params["embed"]["pos"][: tokens.shape[1]][None]
+        return x, positions
+
+    def _embed_decoder(self, params, batch: dict):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = embed(params["embed"], tokens, cfg)
+        if cfg.pos == "learned":
+            x = x + params["embed"]["pos"][: tokens.shape[1]][None]
+        return x, _default_positions(tokens)
+
+
+def _default_positions(tokens: jnp.ndarray) -> jnp.ndarray:
+    b, s = tokens.shape
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+
+def _maybe_remat(body, remat: str, static_argnums=()):
+    if remat == "none":
+        return body
+    if remat == "full":
+        return jax.checkpoint(body, static_argnums=static_argnums)
+    if remat == "dots":
+        return jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            static_argnums=static_argnums,
+        )
+    raise ValueError(remat)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,15 @@
+"""Optimizer substrate: AdamW + schedules + gradient compression."""
+from .adamw import OptState, adamw_init, adamw_update, global_norm, lr_at
+from .compress import compress, compressed_psum, decompress, init_error
+
+__all__ = [
+    "OptState",
+    "adamw_init",
+    "adamw_update",
+    "compress",
+    "compressed_psum",
+    "decompress",
+    "global_norm",
+    "init_error",
+    "lr_at",
+]

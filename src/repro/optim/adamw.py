@@ -1,0 +1,76 @@
+"""AdamW with warmup+cosine schedule and global-norm clipping (functional).
+
+Parameters stay bf16; first/second moments are f32 (the usual TPU memory
+split).  The update math runs in f32 and casts back.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import TrainConfig
+
+__all__ = ["OptState", "adamw_init", "adamw_update", "lr_at"]
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jnp.ndarray
+
+
+def adamw_init(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def lr_at(step: jnp.ndarray, tc: TrainConfig, total_steps: int = 10_000):
+    warm = tc.learning_rate * (step + 1) / max(tc.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - tc.warmup_steps) / max(total_steps - tc.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = 0.5 * tc.learning_rate * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < tc.warmup_steps, warm, cos).astype(jnp.float32)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def adamw_update(grads, state: OptState, params, tc: TrainConfig):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, tc.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = lr_at(state.step, tc)
+    b1, b2 = tc.b1, tc.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        mh = m_new / bc1
+        vh = v_new / bc2
+        delta = lr * (mh / (jnp.sqrt(vh) + 1e-8) + tc.weight_decay * p.astype(jnp.float32))
+        return (p.astype(jnp.float32) - delta).astype(p.dtype), m_new, v_new
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(new_m, new_v, step), {"grad_norm": gnorm, "lr": lr}

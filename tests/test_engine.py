@@ -1,0 +1,162 @@
+"""SEM engine invariants: SpMV correctness, chunk skipping, hybrid paths.
+
+Property tests (hypothesis) assert the system's core invariant: for any
+graph, frontier, and semiring, the SEM chunked path, the point-to-point
+path, and the flat in-memory path all compute identical results — the SEM
+machinery changes I/O, never answers.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    MIN_PLUS,
+    OR_AND,
+    PLUS_TIMES,
+    device_graph,
+    flat_spmv,
+    hybrid_spmv,
+    p2p_spmv,
+    sem_spmv,
+    spmv,
+)
+from repro.core.sem import chunk_activity
+from repro.graph import erdos_renyi, from_edges
+
+
+def _ref_push(g, x, active):
+    y = np.zeros(g.n)
+    src, dst = g.edges()
+    mask = np.asarray(active)[src]
+    np.add.at(y, dst[mask], np.asarray(x)[src[mask]])
+    return y
+
+
+@st.composite
+def graph_and_frontier(draw):
+    n = draw(st.integers(4, 80))
+    m = draw(st.integers(0, 300))
+    seed = draw(st.integers(0, 2**16))
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    g = from_edges(src, dst, n=n)
+    frontier = rng.random(n) < draw(st.floats(0.0, 1.0))
+    chunk = draw(st.sampled_from([8, 64, 256]))
+    return g, frontier, chunk
+
+
+@given(graph_and_frontier())
+@settings(max_examples=30, deadline=None)
+def test_property_sem_equals_flat_equals_p2p(gf):
+    g, frontier, chunk = gf
+    sg = device_graph(g, chunk_size=chunk)
+    x = jnp.asarray(np.linspace(0.0, 1.0, g.n), jnp.float32)
+    act = jnp.asarray(frontier)
+    ref = _ref_push(g, x, frontier)
+    y_sem, _ = spmv(sg, x, act, PLUS_TIMES, direction="out")
+    y_flat = flat_spmv(sg, x, act, PLUS_TIMES, direction="out")
+    y_p2p, _ = p2p_spmv(
+        sg, x, act, PLUS_TIMES, direction="out", vcap=g.n, ecap=max(g.m, 1)
+    )
+    np.testing.assert_allclose(np.asarray(y_sem), ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_flat), ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_p2p), ref, rtol=1e-5, atol=1e-5)
+
+
+@given(graph_and_frontier())
+@settings(max_examples=20, deadline=None)
+def test_property_pull_equals_push_when_all_active(gf):
+    g, _, chunk = gf
+    sg = device_graph(g, chunk_size=chunk)
+    x = jnp.asarray(np.arange(g.n), jnp.float32)
+    act = jnp.ones(g.n, bool)
+    y_push, _ = spmv(sg, x, act, PLUS_TIMES, direction="out")
+    y_pull, _ = spmv(sg, x, act, PLUS_TIMES, direction="in")
+    np.testing.assert_allclose(np.asarray(y_push), np.asarray(y_pull), rtol=1e-5)
+
+
+def test_chunk_skipping_counts():
+    g = erdos_renyi(256, 2000, seed=0)
+    sg = device_graph(g, chunk_size=128)
+    x = jnp.ones(g.n)
+    none = jnp.zeros(g.n, bool)
+    one = none.at[7].set(True)
+    _, st_none = spmv(sg, x, none, PLUS_TIMES)
+    assert int(st_none.records) == 0
+    assert int(st_none.chunks_skipped) == sg.out_store.num_chunks
+    _, st_one = spmv(sg, x, one, PLUS_TIMES)
+    assert int(st_one.records) > 0
+    assert int(st_one.chunks_skipped) < sg.out_store.num_chunks
+    # single active vertex touches few chunks
+    assert int(st_one.records) <= 2 * 128
+
+
+def test_chunk_activity_matches_fetches():
+    g = erdos_renyi(200, 1500, seed=1)
+    sg = device_graph(g, chunk_size=64)
+    rng = np.random.default_rng(3)
+    act = jnp.asarray(rng.random(g.n) < 0.05)
+    mask = chunk_activity(sg.out_store, act)
+    _, st = spmv(sg, jnp.ones(g.n), act, PLUS_TIMES)
+    fetched = int(jnp.sum(mask.astype(jnp.int32)))
+    assert fetched * 64 == int(st.records)
+    assert int(st.chunks_skipped) == sg.out_store.num_chunks - fetched
+
+
+def test_reverse_spmv_is_transpose():
+    g = erdos_renyi(64, 400, seed=5)
+    sg = device_graph(g, chunk_size=64)
+    x = jnp.asarray(np.random.default_rng(0).random(g.n), jnp.float32)
+    act = jnp.ones(g.n, bool)
+    # reverse on the out-store: y[src] += x[dst] over edges
+    y, _ = sem_spmv(sg.out_store, x, act, PLUS_TIMES, reverse=True)
+    src, dst = g.edges()
+    ref = np.zeros(g.n)
+    np.add.at(ref, src, np.asarray(x)[dst])
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-5)
+
+
+def test_min_plus_semiring():
+    # SSSP one relaxation step on a weighted path
+    g = from_edges([0, 1, 2], [1, 2, 3], n=4, weights=[1.0, 2.0, 3.0])
+    sg = device_graph(g, chunk_size=4)
+    dist = jnp.asarray([0.0, jnp.inf, jnp.inf, jnp.inf])
+    act = jnp.ones(4, bool)
+    y, _ = spmv(sg, dist, act, MIN_PLUS, y_init=dist)
+    np.testing.assert_allclose(np.asarray(y), [0.0, 1.0, np.inf, np.inf])
+
+
+def test_or_and_multilane():
+    g = from_edges([0, 1], [1, 2], n=3)
+    sg = device_graph(g, chunk_size=4)
+    x = jnp.zeros((3, 2), bool).at[0, 0].set(True).at[1, 1].set(True)
+    y, _ = spmv(sg, x, jnp.ones(3, bool), OR_AND)
+    assert np.asarray(y).tolist() == [[False, False], [True, False], [False, True]]
+
+
+def test_hybrid_switches_paths():
+    g = erdos_renyi(512, 4000, seed=2)
+    sg = device_graph(g, chunk_size=256)
+    x = jnp.ones(g.n)
+    dense_front = jnp.ones(g.n, bool)
+    sparse_front = jnp.zeros(g.n, bool).at[3].set(True)
+    _, st_dense = hybrid_spmv(
+        sg, x, dense_front, PLUS_TIMES, vcap=g.n, ecap=g.m, switch_fraction=0.1
+    )
+    _, st_sparse = hybrid_spmv(
+        sg, x, sparse_front, PLUS_TIMES, vcap=g.n, ecap=g.m, switch_fraction=0.1
+    )
+    # dense path fetches whole chunks; sparse path fetches exact rows
+    assert int(st_dense.records) == sg.out_store.num_chunks * 256
+    assert int(st_sparse.records) == int(g.out_degree[3])
+    assert int(st_sparse.requests) == 1
+
+
+def test_weighted_spmv():
+    g = from_edges([0, 0, 1], [1, 2, 2], n=3, weights=[2.0, 3.0, 5.0])
+    sg = device_graph(g, chunk_size=4)
+    x = jnp.asarray([1.0, 10.0, 0.0])
+    y, _ = spmv(sg, x, jnp.ones(3, bool), PLUS_TIMES)
+    np.testing.assert_allclose(np.asarray(y), [0.0, 2.0, 53.0])

@@ -1,0 +1,99 @@
+"""Chunked online-softmax attention vs the dense oracle (fwd + grads)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.flash import flash_attention, pick_chunk
+
+
+def dense_ref(q, k, v, qpos, kpos, window, causal, scale):
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,btkh->bkgqt", qg, k.astype(jnp.float32)) * scale
+    qp, kp = qpos[:, :, None], kpos[:, None, :]
+    valid = kp >= 0
+    if causal:
+        valid &= kp <= qp
+        valid = valid & ((window == 0) | (kp > qp - window))
+    s = jnp.where(valid[:, None, None], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+CASES = [
+    # b, sq, t, h, kv, hd, causal, window, cq, ck
+    (2, 16, 16, 4, 2, 8, True, 0, 4, 8),
+    (1, 32, 32, 4, 1, 16, True, 10, 8, 8),
+    (2, 24, 24, 6, 6, 8, False, 0, 8, 8),
+    (2, 16, 48, 4, 2, 8, True, 0, 16, 16),
+    (1, 64, 64, 2, 2, 4, True, 7, 16, 32),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_flash_forward(case):
+    b, sq, t, h, kv, hd, causal, window, cq, ck = case
+    rng = np.random.default_rng(sum(case[:6]))
+    q = jnp.asarray(rng.normal(size=(b, sq, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, t, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, t, kv, hd)), jnp.float32)
+    qpos = jnp.broadcast_to(jnp.arange(sq)[None] + (t - sq), (b, sq)).astype(jnp.int32)
+    kpos = jnp.broadcast_to(jnp.arange(t)[None], (b, t)).astype(jnp.int32)
+    w = jnp.asarray(window, jnp.int32)
+    out = flash_attention(q, k, v, qpos, kpos, w, causal, hd**-0.5, cq, ck)
+    ref = dense_ref(q, k, v, qpos, kpos, w, causal, hd**-0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("case", CASES[:3])
+def test_flash_grads(case):
+    b, sq, t, h, kv, hd, causal, window, cq, ck = case
+    rng = np.random.default_rng(17)
+    q = jnp.asarray(rng.normal(size=(b, sq, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, t, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, t, kv, hd)), jnp.float32)
+    qpos = jnp.broadcast_to(jnp.arange(sq)[None] + (t - sq), (b, sq)).astype(jnp.int32)
+    kpos = jnp.broadcast_to(jnp.arange(t)[None], (b, t)).astype(jnp.int32)
+    w = jnp.asarray(window, jnp.int32)
+
+    def loss_f(q, k, v):
+        return jnp.sum(
+            flash_attention(q, k, v, qpos, kpos, w, causal, hd**-0.5, cq, ck) ** 2
+        )
+
+    def loss_r(q, k, v):
+        return jnp.sum(dense_ref(q, k, v, qpos, kpos, w, causal, hd**-0.5) ** 2)
+
+    gf = jax.grad(loss_f, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=3e-4, rtol=3e-4)
+
+
+def test_flash_packed_positions():
+    """Two packed sequences in one row: tokens of sequence B must not attend
+    to sequence A... they share monotone positions, so causal masking by
+    *position* still applies — what matters is the chunk skip stays sound."""
+    rng = np.random.default_rng(3)
+    b, sq, h, kv, hd = 1, 32, 2, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, sq, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, sq, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, sq, kv, hd)), jnp.float32)
+    # positions restart mid-row (packing)
+    pos = np.concatenate([np.arange(16), np.arange(16)])[None]
+    pos = jnp.asarray(pos, jnp.int32)
+    w = jnp.zeros((), jnp.int32)
+    out = flash_attention(q, k, v, pos, pos, w, True, hd**-0.5, 8, 8)
+    ref = dense_ref(q, k, v, pos, pos, w, True, hd**-0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_pick_chunk():
+    assert pick_chunk(4096, 512) == 512
+    assert pick_chunk(100, 64) == 50
+    assert pick_chunk(7, 4) == 1
+    assert pick_chunk(32768, 1024) == 1024

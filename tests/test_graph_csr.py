@@ -1,0 +1,70 @@
+"""Graph container + generator unit tests."""
+import numpy as np
+import pytest
+
+from repro.graph import (
+    cycle_graph,
+    degree_order,
+    erdos_renyi,
+    from_edges,
+    path_graph,
+    reverse,
+    rmat,
+    star_graph,
+)
+
+
+def test_from_edges_basic():
+    g = from_edges([0, 1, 2, 2], [1, 2, 0, 1], n=3)
+    g.validate()
+    assert g.n == 3 and g.m == 4
+    assert list(g.indices[g.indptr[2] : g.indptr[3]]) == [0, 1]
+    # in-edges of 1: from 0 and 2
+    assert sorted(g.in_indices[g.in_indptr[1] : g.in_indptr[2]]) == [0, 2]
+
+
+def test_dedup_and_self_loops():
+    g = from_edges([0, 0, 0, 1], [1, 1, 0, 1], n=2)
+    assert g.m == 1  # (0,1) deduped; self loops dropped
+    g2 = from_edges([0, 0], [1, 1], n=2, weights=[2.0, 3.0])
+    assert g2.m == 1 and g2.weights[0] == pytest.approx(5.0)
+
+
+def test_symmetrize():
+    g = from_edges([0], [1], n=3, symmetrize=True)
+    assert g.m == 2
+    assert (g.out_degree == np.array([1, 1, 0])).all()
+
+
+def test_reverse():
+    g = from_edges([0, 1], [1, 2], n=3)
+    r = reverse(g)
+    assert (r.out_degree == g.in_degree).all()
+    src, dst = r.edges()
+    assert sorted(zip(src.tolist(), dst.tolist())) == [(1, 0), (2, 1)]
+
+
+def test_generators_shapes():
+    g = rmat(8, edge_factor=4, seed=0)
+    assert g.n == 256 and g.m > 0
+    g = erdos_renyi(100, 300, seed=1)
+    assert g.n == 100
+    assert path_graph(5).m == 8  # 4 undirected edges, both directions
+    assert cycle_graph(5).m == 10
+    assert star_graph(5).out_degree[0] == 4
+
+
+def test_rmat_is_skewed():
+    g = rmat(10, edge_factor=8, seed=3)
+    deg = np.sort(g.out_degree)[::-1]
+    # power-law-ish: top 1% of vertices hold >5% of edges
+    top = deg[: max(1, g.n // 100)].sum()
+    assert top > 0.05 * g.m
+
+
+def test_degree_order_descending():
+    g = erdos_renyi(64, 400, seed=2, symmetrize=True)
+    perm = degree_order(g)
+    deg = g.out_degree + g.in_degree
+    ordered = deg[perm]
+    assert all(ordered[i] >= ordered[i + 1] for i in range(len(ordered) - 1))

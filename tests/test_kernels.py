@@ -1,0 +1,142 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.graph.generators import cycle_graph, erdos_renyi, rmat, star_graph
+from repro.kernels.decode_attn import decode_attention, decode_attention_ref
+from repro.kernels.spmv import blocked_spmv, blocked_spmv_ref, build_blocked
+from repro.kernels.spmv.ref import coo_spmv_ref
+
+
+# --------------------------------------------------------------- spmv
+@pytest.mark.parametrize("semiring", ["plus_times", "min_plus"])
+@pytest.mark.parametrize("bd,bs", [(32, 32), (64, 16), (16, 64)])
+@pytest.mark.parametrize("k", [1, 3])
+def test_spmv_matches_ref(semiring, bd, bs, k):
+    g = erdos_renyi(150, 1200, seed=3)
+    bg = build_blocked(g, bd=bd, bs=bs, semiring=semiring)
+    rng = np.random.default_rng(bd * bs + k)
+    shape = (g.n, k) if k > 1 else (g.n,)
+    x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    active = jnp.asarray(rng.random(g.n) < 0.4)
+    y, _ = blocked_spmv(bg, x, active, interpret=True)
+    y_ref = blocked_spmv_ref(bg, x, active)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("graph_fn", [cycle_graph, star_graph])
+def test_spmv_full_frontier_equals_coo(graph_fn):
+    """With every vertex active the tile decomposition must equal the plain
+    edge-list result (the in-memory ground truth)."""
+    g = graph_fn(100)
+    bg = build_blocked(g, bd=16, bs=16)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(g.n,)).astype(np.float32))
+    y, stats = blocked_spmv(bg, x, None, interpret=True)
+    src = np.repeat(np.arange(g.n), np.diff(g.indptr))
+    y_coo = coo_spmv_ref(g.n, jnp.asarray(src), jnp.asarray(g.indices), None, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_coo), atol=1e-4, rtol=1e-4)
+    assert int(stats["tiles_skipped"]) == 0
+
+
+def test_spmv_block_skipping_counts():
+    """A frontier confined to one source block must skip every tile whose
+    source block differs — the kernel-level chunk-activity elision."""
+    g = cycle_graph(256)
+    bg = build_blocked(g, bd=32, bs=32)
+    active = np.zeros(256, bool)
+    active[0:8] = True  # only source block 0
+    y, stats = blocked_spmv(bg, jnp.ones(256), jnp.asarray(active), interpret=True)
+    sbids = np.asarray(bg.sbid)
+    expected = int((sbids == 0).sum())
+    assert int(stats["tiles_fetched"]) == expected
+    assert int(stats["tiles_skipped"]) == bg.num_tiles - expected
+    # skipped tiles contribute nothing
+    y_ref = blocked_spmv_ref(bg, jnp.ones(256), jnp.asarray(active))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5)
+
+
+def test_spmv_rmat_pagerank_iteration():
+    """One PR-push iteration on a skewed graph: kernel == oracle."""
+    g = rmat(8, edge_factor=8, seed=2)
+    bg = build_blocked(g, bd=32, bs=32)
+    deg = np.maximum(np.asarray(g.out_degree), 1)
+    x = jnp.asarray((np.ones(g.n) / deg).astype(np.float32))
+    y, _ = blocked_spmv(bg, x, None, interpret=True)
+    y_ref = blocked_spmv_ref(bg, x, None)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4, rtol=1e-4)
+
+
+# --------------------------------------------------------- decode_attn
+@pytest.mark.parametrize("kv,g", [(1, 8), (2, 4), (8, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attn_matches_ref(kv, g, dtype):
+    rng = np.random.default_rng(kv * 10 + g)
+    B, hd, T = 2, 32, 256
+    h = kv * g
+    q = jnp.asarray(rng.normal(size=(B, h, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, T, kv, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, T, kv, hd)), dtype)
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T)).astype(jnp.int32)
+    cur = jnp.asarray([T // 3, T - 1], jnp.int32)
+    out = decode_attention(q, k, v, pos, cur, block_t=64, interpret=True)
+    ref = decode_attention_ref(q, k, v, pos, cur)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 100])
+def test_decode_attn_window(window):
+    """Sliding window: only positions inside the window contribute, and
+    whole out-of-window blocks are skipped."""
+    rng = np.random.default_rng(window)
+    B, kv, g, hd, T = 1, 2, 2, 16, 512
+    q = jnp.asarray(rng.normal(size=(B, kv * g, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, kv, hd)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T)).astype(jnp.int32)
+    cur = jnp.asarray([T - 1], jnp.int32)
+    out = decode_attention(
+        q, k, v, pos, cur, window=window, block_t=64, interpret=True
+    )
+    ref = decode_attention_ref(q, k, v, pos, cur, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+def test_decode_attn_rotating_cache_slots():
+    """Rotating (mod-T) slot layout: the kernel keys masks on stored
+    positions, so scrambled slot order must not change the result."""
+    rng = np.random.default_rng(7)
+    B, kv, g, hd, T = 2, 1, 4, 16, 128
+    q = jnp.asarray(rng.normal(size=(B, kv * g, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, kv, hd)), jnp.float32)
+    perm = rng.permutation(T)
+    base = np.broadcast_to(np.arange(T)[None], (B, T)).copy()
+    pos = jnp.asarray(base[:, perm], jnp.int32)
+    kp, vp = k[:, perm], v[:, perm]
+    cur = jnp.asarray([T - 1, T // 2], jnp.int32)
+    out = decode_attention(q, kp, vp, pos, cur, block_t=32, interpret=True)
+    ref = decode_attention_ref(q, k, v, jnp.asarray(base, jnp.int32), cur)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+def test_decode_attn_empty_slots():
+    """-1 (never written) slots are dead regardless of their k/v payload."""
+    rng = np.random.default_rng(9)
+    B, kv, g, hd, T = 1, 2, 2, 16, 128
+    q = jnp.asarray(rng.normal(size=(B, kv * g, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, kv, hd)), jnp.float32)
+    pos_np = np.broadcast_to(np.arange(T)[None], (B, T)).copy()
+    pos_np[:, 64:] = -1  # half the cache never written
+    pos = jnp.asarray(pos_np, jnp.int32)
+    cur = jnp.asarray([T - 1], jnp.int32)
+    out = decode_attention(q, k, v, pos, cur, block_t=32, interpret=True)
+    # oracle over the live prefix only
+    ref = decode_attention_ref(
+        q, k[:, :64], v[:, :64], pos[:, :64], cur
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)
