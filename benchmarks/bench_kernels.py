@@ -11,10 +11,11 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import PLUS_TIMES, spmv
 from repro.kernels.decode_attn import decode_attention, decode_attention_ref
 from repro.kernels.spmv import blocked_spmv, blocked_spmv_ref, build_blocked
 
-from .common import bench_graph, row
+from .common import bench_graph, row, sem_graph
 
 __all__ = ["run"]
 
@@ -48,6 +49,25 @@ def run(quick: bool = True) -> list:
             row("spmv_kernel", tag, "tile_MB_fetched",
                 int(stats["tile_bytes"]) / 1e6)
         )
+
+    # engine-level blocked backend: unified IOStats vs the scan path on the
+    # same sparse frontier (the tentpole dispatch, not the bare kernel).
+    sg = sem_graph(g, chunk_size=2048, blocked=True, bd=64, bs=64)
+    active_np = np.zeros(g.n, bool)
+    active_np[: max(g.n // 20, 1)] = True
+    active = jnp.asarray(active_np)
+    xe = jnp.asarray(rng.normal(size=(g.n,)).astype(np.float32))
+    y_s, st_s = spmv(sg, xe, active, PLUS_TIMES, backend="scan")
+    y_b, st_b = spmv(sg, xe, active, PLUS_TIMES, backend="blocked")
+    np.testing.assert_allclose(np.asarray(y_s), np.asarray(y_b), atol=1e-4)
+    assert int(st_s.messages) == int(st_b.messages)
+    rows += [
+        row("spmv_engine", "scan", "read_records", int(st_s.records)),
+        row("spmv_engine", "blocked", "read_records", int(st_b.records)),
+        row("spmv_engine", "scan", "fetches_skipped", int(st_s.chunks_skipped)),
+        row("spmv_engine", "blocked", "fetches_skipped", int(st_b.chunks_skipped)),
+        row("spmv_engine", "parity", "messages", int(st_b.messages)),
+    ]
 
     # decode attention: window block skipping at a long context
     B, kv, grp, hd, T = 1, 2, 4, 64, 4096

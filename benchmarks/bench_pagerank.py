@@ -69,4 +69,35 @@ def run(quick: bool = True) -> list:
         row("pagerank", "push_over_pull", "runtime_speedup_x", t_pull / t_push),
         row("pagerank", "push_over_pull", "fixed_point_maxerr", err),
     ]
+    rows += _backend_sweep(quick)
+    return rows
+
+
+def _backend_sweep(quick: bool) -> list:
+    """PR-push through both multicast backends (engine 'Backends' section).
+
+    On CPU the blocked path runs the Pallas kernel in interpret mode, so
+    its wall-clock is an emulation cost, not TPU performance; the workload
+    is kept small enough that the sweep stays in seconds.  The I/O rows
+    (records/skips) are hardware-independent and directly comparable.
+    """
+    g = bench_graph(9 if quick else 10, edge_factor=8)
+    sg = sem_graph(g, chunk_size=2048, blocked=True, bd=64, bs=64)
+    rows = []
+    ranks = {}
+    for backend in ("scan", "blocked"):
+        fn = jax.jit(lambda b=backend: pagerank_push(sg, tol=1e-4, backend=b))
+        (r, io, it), t = timeit(fn, repeats=2)
+        ranks[backend] = np.asarray(r)
+        rows += [
+            row("pagerank", f"push_{backend}", "runtime_s", t),
+            row("pagerank", f"push_{backend}", "supersteps", int(it)),
+            row("pagerank", f"push_{backend}", "read_MB",
+                int(io.records) * EDGE_RECORD_BYTES / 1e6),
+            row("pagerank", f"push_{backend}", "fetches_skipped",
+                int(io.chunks_skipped)),
+        ]
+    err = float(np.max(np.abs(ranks["scan"] - ranks["blocked"])))
+    assert err < 1e-5, f"scan/blocked fixed points diverge: {err}"
+    rows.append(row("pagerank", "backends", "scan_vs_blocked_maxerr", err))
     return rows

@@ -22,8 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.algs import pagerank_inmem, pagerank_push
-from repro.core import flat_spmv, sem_spmv
-from repro.core.semiring import PLUS_TIMES
+from repro.core import PLUS_TIMES, flat_spmv, sem_spmv, spmv
 
 from .common import bench_graph, row, sem_graph, timeit
 
@@ -53,6 +52,27 @@ def run(quick: bool = True) -> list:
         row("sem_vs_inmem", "sweep_inmem", "runtime_s", t_flat),
         row("sem_vs_inmem", "sweep_sem", "runtime_s", t_sem),
         row("sem_vs_inmem", "sweep_sem", "fraction_of_inmem", frac_sweep),
+    ]
+
+    # blocked-backend sweep on a smaller graph (interpret mode on CPU is an
+    # emulation, so this row tracks correctness + I/O shape, not TPU speed).
+    gb = bench_graph(10, edge_factor=8)
+    sgb = sem_graph(gb, chunk_size=2048, blocked=True, bd=128, bs=128)
+    allb = jnp.ones(gb.n, bool)
+    xb = jnp.asarray(rng.random(gb.n).astype(np.float32))
+    blk_fn = jax.jit(
+        lambda x: spmv(sgb, x, allb, PLUS_TIMES, backend="blocked")[0]
+    )
+    flatb_fn = jax.jit(lambda x: flat_spmv(sgb, x, allb, PLUS_TIMES))
+    y_blk, t_blk = timeit(lambda: blk_fn(xb), repeats=3)
+    y_flatb, t_flatb = timeit(lambda: flatb_fn(xb), repeats=3)
+    np.testing.assert_allclose(
+        np.asarray(y_blk), np.asarray(y_flatb), rtol=1e-4
+    )
+    rows += [
+        row("sem_vs_inmem", "sweep_blocked", "runtime_s", t_blk),
+        row("sem_vs_inmem", "sweep_blocked", "fraction_of_inmem",
+            t_flatb / t_blk),
     ]
 
     # end-to-end: optimized SEM app vs flat in-memory PageRank

@@ -23,10 +23,13 @@ def bench_graph(scale: int = 10, edge_factor: int = 16, symmetrize: bool = False
     return _CACHE[key]
 
 
-def sem_graph(g, chunk_size: int = 4096):
-    key = ("sem", id(g), chunk_size)
+def sem_graph(g, chunk_size: int = 4096, *, blocked: bool = False,
+              bd: int = 128, bs: int = 128):
+    key = ("sem", id(g), chunk_size, blocked, bd, bs)
     if key not in _CACHE:
-        _CACHE[key] = device_graph(g, chunk_size=chunk_size)
+        _CACHE[key] = device_graph(
+            g, chunk_size=chunk_size, blocked=blocked, bd=bd, bs=bs
+        )
     return _CACHE[key]
 
 

@@ -1,12 +1,17 @@
 """Benchmark driver: one module per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]``
+``PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--smoke]``
 
 Emits ``bench,variant,metric,value`` CSV rows, then a claims-validation
 summary comparing measured ratios against the direction/shape of the
 paper's figures (exact magnitudes depend on the workload; the paper used
 the 1.5B-edge Twitter graph on an SSD array, we use RMAT with matched skew
 and count the same I/O events).
+
+``--smoke`` runs a seconds-fast CPU pass that exercises BOTH multicast
+backends (chunked scan and the blocked Pallas tile kernel in interpret
+mode) end-to-end through PageRank and multi-source BFS, asserting parity —
+the CI guard that the blocked path stays wired into the engine.
 """
 from __future__ import annotations
 
@@ -16,7 +21,7 @@ import sys
 import time
 import traceback
 
-from .common import print_rows
+from .common import print_rows, row
 
 BENCHES = [
     "bench_pagerank",
@@ -70,11 +75,61 @@ CLAIMS = [
 ]
 
 
+def smoke() -> int:
+    """Seconds-fast blocked-backend exercise (see module docstring)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.algs import bfs_multi, pagerank_push
+    from repro.core import device_graph
+    from repro.graph.generators import rmat
+
+    from .common import timeit
+
+    t0 = time.time()
+    g = rmat(7, edge_factor=8, seed=2)
+    sg = device_graph(g, chunk_size=256, blocked=True, bd=32, bs=32)
+    rows = []
+    results = {}
+    for backend in ("scan", "blocked"):
+        fn = jax.jit(lambda b=backend: pagerank_push(sg, tol=1e-4, backend=b))
+        (r, io, it), t = timeit(fn, repeats=1)
+        results[backend] = np.asarray(r)
+        rows += [
+            row("smoke", f"push_{backend}", "runtime_s", t),
+            row("smoke", f"push_{backend}", "fetches_skipped",
+                int(io.chunks_skipped)),
+        ]
+        src = jnp.asarray([0, 5, 17, 99], jnp.int32)
+        (d, bio, _), tb = timeit(
+            jax.jit(lambda b=backend: bfs_multi(sg, src, backend=b)), repeats=1
+        )
+        results[f"bfs_{backend}"] = np.asarray(d)
+        rows.append(row("smoke", f"bfs4_{backend}", "runtime_s", tb))
+    err = float(np.max(np.abs(results["scan"] - results["blocked"])))
+    bfs_ok = bool((results["bfs_scan"] == results["bfs_blocked"]).all())
+    rows.append(row("smoke", "backends", "pagerank_maxerr", err))
+    print_rows(rows)
+    ok = err < 1e-5 and bfs_ok
+    print(f"# smoke {'PASS' if ok else 'FAIL'} in {time.time() - t0:.1f}s "
+          f"(pagerank maxerr {err:.2g}, bfs equal {bfs_ok})")
+    return 0 if ok else 1
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true", help="larger workloads")
     ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="seconds-fast CPU pass exercising the blocked backend",
+    )
     args = ap.parse_args()
+    if args.smoke:
+        if args.only or args.full:
+            print("# --smoke ignores --only/--full", flush=True)
+        return smoke()
 
     rows = []
     failures = []

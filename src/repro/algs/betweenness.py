@@ -29,7 +29,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from ..core import IOStats, SemGraph, bsp_run, sem_spmv
+from ..core import IOStats, SemGraph, bsp_run, sem_spmv, spmv
 from ..core.sem import chunk_activity
 from ..core.semiring import PLUS_TIMES
 
@@ -44,8 +44,14 @@ class _FwdState(NamedTuple):
     io: IOStats
 
 
-def _forward(sg: SemGraph, sources: jnp.ndarray, max_iters: int):
-    """Synchronous multi-source BFS with path counting."""
+def _forward(sg: SemGraph, sources: jnp.ndarray, max_iters: int,
+             backend: str = "scan"):
+    """Synchronous multi-source BFS with path counting.
+
+    The K source lanes ride the engine's lane dimension — under
+    ``backend='blocked'`` they map straight onto the kernel's K dimension,
+    so one tile fetch serves all K searches (§4.4 multi-source batching).
+    """
     n = sg.n
     K = sources.shape[0]
     ar = jnp.arange(K)
@@ -56,7 +62,8 @@ def _forward(sg: SemGraph, sources: jnp.ndarray, max_iters: int):
     def step(s: _FwdState):
         active = jnp.any(s.frontier, axis=1)
         send = jnp.where(s.frontier, s.sigma, 0.0)
-        recv, st = sem_spmv(sg.out_store, send, active, PLUS_TIMES)
+        recv, st = spmv(sg, send, active, PLUS_TIMES, direction="out",
+                        backend=backend)
         newly = (recv > 0) & (s.dist < 0)
         sigma = jnp.where(newly, recv, s.sigma)
         dist = jnp.where(newly, s.level + 1, s.dist)
@@ -74,7 +81,8 @@ def _forward(sg: SemGraph, sources: jnp.ndarray, max_iters: int):
     return s, iters
 
 
-def _backward(sg: SemGraph, sigma, dist, max_level, max_iters):
+def _backward(sg: SemGraph, sigma, dist, max_level, max_iters,
+              backend: str = "scan"):
     """Synchronous dependency accumulation, level = max_level-1 .. 0."""
     n, K = sigma.shape
 
@@ -85,7 +93,8 @@ def _backward(sg: SemGraph, sigma, dist, max_level, max_iters):
         x = jnp.where(send_mask, (1.0 + delta) / jnp.maximum(sigma, 1e-30), 0.0)
         recv_mask = dist == level
         active = jnp.any(recv_mask, axis=1)
-        recv, st = sem_spmv(sg.out_store, x, active, PLUS_TIMES, reverse=True)
+        recv, st = spmv(sg, x, active, PLUS_TIMES, direction="out",
+                        reverse=True, backend=backend)
         delta = jnp.where(recv_mask, delta + sigma * recv, delta)
         io = (io + st)._replace(supersteps=io.supersteps + 1)
         return delta, level - 1, io
@@ -109,20 +118,27 @@ def _finish(delta, sources):
 
 
 def bc_multisource(
-    sg: SemGraph, sources: jnp.ndarray, *, max_iters: int | None = None
+    sg: SemGraph, sources: jnp.ndarray, *, max_iters: int | None = None,
+    backend: str = "scan",
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
-    """Synchronous multi-source Brandes. Returns (bc[n], IOStats, supersteps)."""
+    """Synchronous multi-source Brandes. Returns (bc[n], IOStats, supersteps).
+
+    ``backend='blocked'`` streams both the forward sigma pushes and the
+    backward dependency pulls through the Pallas tile kernel (the backward
+    pass uses the transposed ``out_blocked_rev`` view).
+    """
     sources = jnp.asarray(sources, jnp.int32)
     max_iters = max_iters or sg.n + 1
-    fwd, fwd_iters = _forward(sg, sources, max_iters)
+    fwd, fwd_iters = _forward(sg, sources, max_iters, backend)
     max_level = jnp.max(jnp.where(fwd.dist < 0, -1, fwd.dist))
-    delta, bio = _backward(sg, fwd.sigma, fwd.dist, max_level, max_iters)
+    delta, bio = _backward(sg, fwd.sigma, fwd.dist, max_level, max_iters, backend)
     io = fwd.io + bio
     return _finish(delta, sources), io, fwd_iters + jnp.maximum(max_level, 0)
 
 
 def bc_unisource(
-    sg: SemGraph, sources: jnp.ndarray, *, max_iters: int | None = None
+    sg: SemGraph, sources: jnp.ndarray, *, max_iters: int | None = None,
+    backend: str = "scan",
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
     """K separate single-source runs (the Fig. 6 baseline)."""
     sources = jnp.asarray(sources, jnp.int32)
@@ -130,7 +146,9 @@ def bc_unisource(
     io = IOStats.zero()
     steps = jnp.zeros((), jnp.int32)
     for i in range(sources.shape[0]):
-        b, st, it = bc_multisource(sg, sources[i : i + 1], max_iters=max_iters)
+        b, st, it = bc_multisource(
+            sg, sources[i : i + 1], max_iters=max_iters, backend=backend
+        )
         bc, io, steps = bc + b, io + st, steps + it
     return bc, io, steps
 

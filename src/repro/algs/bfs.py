@@ -36,11 +36,15 @@ def bfs_multi(
     sources: jnp.ndarray,
     *,
     max_iters: int | None = None,
+    backend: str = "scan",
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
     """K concurrent BFS over the out-edges.
 
     Args:
       sources: int32[K] source vertex ids.
+      backend: 'scan' (chunked) or 'blocked' (Pallas tiles; the K lanes map
+        onto the kernel's multi-source lane dimension, so every fetched
+        tile serves all K searches at once — §4.3 batching on the MXU).
 
     Returns:
       (dist int32[n, K] — UNREACHED where not reached, IOStats, supersteps).
@@ -56,7 +60,8 @@ def bfs_multi(
 
     def step(s: BFSState) -> tuple[BFSState, jnp.ndarray]:
         active = jnp.any(s.frontier, axis=1)
-        nxt, st = spmv(sg, s.frontier, active, OR_AND, direction="out")
+        nxt, st = spmv(sg, s.frontier, active, OR_AND, direction="out",
+                       backend=backend)
         newly = nxt & ~s.reached
         reached = s.reached | newly
         dist = jnp.where(newly, s.level + 1, s.dist)
@@ -76,10 +81,12 @@ def bfs_multi(
 
 
 def bfs_uni(
-    sg: SemGraph, source: int, *, max_iters: int | None = None
+    sg: SemGraph, source: int, *, max_iters: int | None = None,
+    backend: str = "scan",
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
     """Single-source BFS (the K=1 degenerate case, for the Fig. 5 baseline)."""
     dist, io, iters = bfs_multi(
-        sg, jnp.asarray([source], jnp.int32), max_iters=max_iters
+        sg, jnp.asarray([source], jnp.int32), max_iters=max_iters,
+        backend=backend,
     )
     return dist[:, 0], io, iters

@@ -1,5 +1,5 @@
 """SEM vertex-centric engine core (the paper's contribution, TPU-adapted)."""
-from .engine import bsp_run, flat_spmv, hybrid_spmv, spmv
+from .engine import blocked_backend_spmv, bsp_run, flat_spmv, hybrid_spmv, spmv
 from .sem import (
     EDGE_RECORD_BYTES,
     EdgeChunkStore,
@@ -24,6 +24,7 @@ __all__ = [
     "MIN_PLUS",
     "OR_AND",
     "PLUS_TIMES",
+    "blocked_backend_spmv",
     "bsp_run",
     "build_store",
     "chunk_activity",

@@ -6,12 +6,49 @@ The engine mirrors FlashGraph's execution model:
     ``lax.while_loop`` is one BSP superstep; the loop exits when the frontier
     drains (all vertices inactive), i.e. the global barrier condition.
   * :func:`hybrid_spmv` — the multicast/point-to-point switch (paper §4.2,
-    "minimize messaging").  Dense frontiers take the chunked multicast path;
-    sparse frontiers take row-exact point-to-point fetches.  The switch is a
+    "minimize messaging").  Dense frontiers take the multicast path; sparse
+    frontiers take row-exact point-to-point fetches.  The switch is a
     ``lax.cond`` so only one path executes.
   * :func:`flat_spmv` — the *in-memory* baseline: one unchunked segment
     reduction over all m edges, no skipping, no counting.  This is what the
     "SEM achieves 80% of in-memory performance" claim is measured against.
+
+Backends
+--------
+The dense-frontier multicast step has two interchangeable executions,
+selected by ``backend=`` on :func:`spmv` / :func:`hybrid_spmv`:
+
+  * ``'scan'`` — :func:`repro.core.sem.sem_spmv`: a ``lax.scan`` over
+    fixed-size edge chunks with per-chunk activity tests.  Runs anywhere,
+    needs only the chunk stores, and is row-exact in its I/O accounting.
+    This is the portable reference path.
+  * ``'blocked'`` — :func:`repro.kernels.spmv.blocked_spmv`: the Pallas TPU
+    kernel streaming dense (Bd, Bs) edge tiles through the MXU, double-
+    buffering each tile's HBM->VMEM DMA behind the previous tile's matmul
+    and eliding the DMA entirely for tiles disjoint from the frontier — the
+    TPU-native analogue of SAFS async reads overlapping compute (the
+    paper's central performance mechanism).  Requires
+    ``device_graph(..., blocked=True)``; runs compiled on TPU and in
+    interpret mode elsewhere.  Frontier skipping is *block*-granular, so
+    the engine masks x (push) or the output rows (pull/reverse) to keep
+    results row-exact and identical to the scan path.
+  * The **point-to-point** path (:func:`repro.core.sem.p2p_spmv`) is
+    orthogonal: :func:`hybrid_spmv` switches to it when the frontier is
+    sparse regardless of the multicast backend, because row-exact fetches
+    beat any page/tile multicast once most blocks are dead.
+
+When each wins: ``scan`` for portability and row-exact I/O counting;
+``blocked`` for dense/medium frontiers where tile matmuls amortize the
+fetch (PageRank iterations, multi-source BFS/BC lanes — the K lane
+dimension of the kernel IS the §4.3/§4.4 multi-source batch); ``p2p`` for
+the sparse tail of a draining frontier.
+
+IOStats are reported in the same units by both multicast backends:
+``requests`` counts active major vertices whose block/chunk was fetched,
+``records`` the edge-record-equivalent of bytes actually moved (whole
+chunks, or whole dense tiles at 4 bytes/slot), ``chunks_skipped`` the
+elided fetch units (chunks or tiles), and ``messages`` the row-exact count
+of edge contributions from active majors (identical across backends).
 """
 from __future__ import annotations
 
@@ -20,10 +57,17 @@ from typing import Any, Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .sem import IOStats, SemGraph, p2p_spmv, pad_state, sem_spmv
+from .sem import (
+    EDGE_RECORD_BYTES,
+    IOStats,
+    SemGraph,
+    p2p_spmv,
+    pad_state,
+    sem_spmv,
+)
 from .semiring import Semiring
 
-__all__ = ["bsp_run", "hybrid_spmv", "flat_spmv", "spmv"]
+__all__ = ["bsp_run", "hybrid_spmv", "flat_spmv", "spmv", "blocked_backend_spmv"]
 
 State = Any
 
@@ -56,6 +100,140 @@ def bsp_run(
     return state, iters
 
 
+def _select_blocked(sg: SemGraph, direction: str, reverse: bool):
+    """(BlockedGraph, active_on, major_degree) for a (direction, reverse)
+    pair, mirroring sem_spmv's gather/key/mask conventions."""
+    if direction == "out" and not reverse:
+        # push: major = src = tile columns; activity skips source blocks.
+        return sg.out_blocked, "src", sg.out_degree
+    if direction == "out" and reverse:
+        # reverse push (bc backward): y[src] (+)= x[dst]; major = src = the
+        # ROWS of the transposed tiles, so activity masks destination-side
+        # blocks of the reverse view (its row blocks).
+        if sg.out_blocked_rev is None and sg.out_blocked is not None:
+            raise ValueError(
+                "reverse blocked view not built; use "
+                "device_graph(..., blocked=True, blocked_reverse=True)"
+            )
+        return sg.out_blocked_rev, "dst", sg.out_degree
+    if direction == "in" and not reverse:
+        # pull: y[dst] (+)= x[src] gathering ALL sources; major = dst = the
+        # rows of the forward tiles.
+        if sg.in_degree is None:
+            raise ValueError(
+                "SemGraph has no in-edge view; pull ('in') blocked dispatch "
+                "needs a graph built with its in-CSR"
+            )
+        return sg.out_blocked, "dst", sg.in_degree
+    raise NotImplementedError("blocked backend: direction='in' with reverse")
+
+
+def blocked_backend_spmv(
+    sg: SemGraph,
+    x: jnp.ndarray,
+    active: jnp.ndarray,
+    sr: Semiring,
+    *,
+    direction: str = "out",
+    reverse: bool = False,
+    y_init: Optional[jnp.ndarray] = None,
+    interpret: Optional[bool] = None,
+) -> tuple[jnp.ndarray, IOStats]:
+    """Row-exact SpMV through the blocked Pallas kernel + unified IOStats.
+
+    Tile skipping is block-granular; exactness is restored by masking the
+    gather side (push: inactive sources send the additive identity) or the
+    scatter side (pull/reverse: inactive major rows keep ``y_init``).
+    Supported semirings: plus_times on 'plus_times' tiles, min_plus on
+    'min_plus' tiles, and or_and on unweighted 'plus_times' tiles or on
+    'bool' occupancy tiles (which any graph can build — required for
+    weighted graphs, where real weights baked into the matmul mass could
+    drop a zero/negative-weight edge from the y>0 reachability threshold).
+    """
+    from ..kernels.spmv import blocked_spmv, default_interpret
+
+    bg, active_on, deg = _select_blocked(sg, direction, reverse)
+    if bg is None:
+        raise ValueError(
+            "SemGraph has no blocked views; build with "
+            "device_graph(..., blocked=True)"
+        )
+    if interpret is None:
+        interpret = default_interpret()
+
+    boolean = sr.name == "or_and"
+    if boolean:
+        if bg.semiring not in ("plus_times", "bool"):
+            raise ValueError(
+                "or_and requires 'plus_times' or 'bool' blocked tiles"
+            )
+        if bg.semiring == "plus_times" and sg.w is not None:
+            # Real weights in the tiles would let a zero or cancelling
+            # negative weight silently drop an edge from the y>0 threshold,
+            # and binarizing here would re-copy the whole tile set every
+            # superstep — require the 0/1 view built once up front instead.
+            raise ValueError(
+                "or_and on a weighted graph needs occupancy tiles; build "
+                "with device_graph(..., blocked_semiring='bool')"
+            )
+    elif sr.name != bg.semiring:
+        raise ValueError(
+            f"semiring {sr.name!r} needs blocked tiles built with "
+            f"semiring={sr.name!r} (have {bg.semiring!r})"
+        )
+
+    n = sg.n
+    xv = x.astype(jnp.float32) if boolean else x
+    if active_on == "src":
+        # Push: only active majors (sources) contribute — mask their sends
+        # with the additive identity so block-granular tiles stay row-exact.
+        ident = jnp.inf if bg.semiring == "min_plus" else 0.0
+        mask = active.reshape((-1,) + (1,) * (xv.ndim - 1))
+        xv = jnp.where(mask, xv, jnp.asarray(ident, xv.dtype))
+
+    y, stats = blocked_spmv(bg, xv, active, active_on=active_on,
+                            interpret=interpret)
+
+    if boolean:
+        y = y > 0
+    if active_on == "dst":
+        # Pull/reverse: contributions land only on active major rows.
+        mask = active.reshape((-1,) + (1,) * (y.ndim - 1))
+        base = (
+            y_init
+            if y_init is not None
+            else jnp.full(y.shape, sr.identity, y.dtype)
+        )
+        y = jnp.where(mask, sr.combine_elem(base.astype(y.dtype), y), base)
+    elif y_init is not None:
+        y = sr.combine_elem(y_init.astype(y.dtype), y)
+    if not boolean:
+        y = y.astype(x.dtype)
+
+    # ---- unified IOStats (same units as the scan path) ----
+    # requests: one per active major vertex whose block holds >=1 tile.
+    blk = bg.bs if active_on == "src" else bg.bd
+    n_blocks = bg.n_src_blocks if active_on == "src" else bg.n_dst_blocks
+    bid = bg.sbid if active_on == "src" else bg.dbid
+    has_tiles = jnp.zeros(n_blocks, bool).at[bid].set(True)
+    ap = jnp.zeros(n_blocks * blk, bool).at[:n].set(active)
+    per_block_active = ap.reshape(n_blocks, blk)
+    requests = jnp.sum(
+        jnp.where(has_tiles[:, None], per_block_active, False).astype(jnp.int32)
+    )
+    # records: bytes moved expressed in edge-record units (dense tiles move
+    # bd*bs 4-byte slots each, fetched or not sparse).
+    tile_records = (bg.bd * bg.bs * 4) // EDGE_RECORD_BYTES
+    st = IOStats(
+        requests=requests,
+        records=(stats["tiles_fetched"] * tile_records).astype(jnp.int32),
+        chunks_skipped=stats["tiles_skipped"].astype(jnp.int32),
+        messages=jnp.sum(jnp.where(active, deg, 0)).astype(jnp.int32),
+        supersteps=jnp.zeros((), jnp.int32),
+    )
+    return y, st
+
+
 def spmv(
     sg: SemGraph,
     x: jnp.ndarray,
@@ -65,8 +243,21 @@ def spmv(
     direction: str = "out",
     y_init: Optional[jnp.ndarray] = None,
     reverse: bool = False,
+    backend: str = "scan",
 ) -> tuple[jnp.ndarray, IOStats]:
-    """Chunked SEM SpMV in the given direction ('out' = push, 'in' = pull)."""
+    """Chunked SEM SpMV in the given direction ('out' = push, 'in' = pull).
+
+    ``backend`` selects the multicast execution (see module docstring):
+    'scan' streams edge chunks through a lax.scan; 'blocked' streams dense
+    Pallas MXU tiles (requires ``device_graph(..., blocked=True)``).
+    """
+    if backend == "blocked":
+        return blocked_backend_spmv(
+            sg, x, active, sr, direction=direction, reverse=reverse,
+            y_init=y_init,
+        )
+    if backend != "scan":
+        raise ValueError(f"unknown backend {backend!r}")
     store = sg.out_store if direction == "out" else sg.in_store
     if store is None:
         raise ValueError(f"SemGraph has no {direction!r} store")
@@ -84,6 +275,7 @@ def hybrid_spmv(
     ecap: int,
     switch_fraction: float = 0.10,
     y_init: Optional[jnp.ndarray] = None,
+    backend: str = "scan",
 ) -> tuple[jnp.ndarray, IOStats]:
     """Multicast/point-to-point hybrid (paper §4.2).
 
@@ -91,8 +283,9 @@ def hybrid_spmv(
     ~10% of its original degree; the SPMD adaptation switches the whole
     *superstep* when the frontier's edge mass falls below
     ``switch_fraction`` of m AND the gather fits the static p2p capacities.
-    Early, dense iterations take the multicast (chunked) path; late, sparse
-    iterations take row-exact fetches — same trade, phrased per-step.
+    Early, dense iterations take the multicast path — chunked scan or
+    blocked Pallas tiles per ``backend`` — late, sparse iterations take
+    row-exact fetches: same trade, phrased per-step.
     """
     deg = sg.out_degree if direction == "out" else sg.in_degree
     act_edges = jnp.sum(jnp.where(active, deg, 0))
@@ -104,7 +297,10 @@ def hybrid_spmv(
     )
 
     def dense(_):
-        return spmv(sg, x, active, sr, direction=direction, y_init=y_init)
+        return spmv(
+            sg, x, active, sr, direction=direction, y_init=y_init,
+            backend=backend,
+        )
 
     def sparse(_):
         return p2p_spmv(

@@ -122,6 +122,15 @@ class SemGraph:
     ``indices`` (CSR, out-edges) back the point-to-point path; ``in_indptr``
     / ``in_indices`` likewise for in-edges. ``indptr`` is padded to length
     n+2 so the sentinel vertex ``n`` has a valid empty row.
+
+    ``out_blocked``/``out_blocked_rev`` are the optional dense-tile views
+    that back the ``backend='blocked'`` Pallas path of the engine (see
+    :mod:`repro.kernels.spmv`): ``out_blocked`` holds the forward operator
+    y[dst] (+)= x[src] (serving push with source-block skipping AND pull
+    with destination-block skipping); ``out_blocked_rev`` holds its
+    transpose y[src] (+)= x[dst] for reverse flows (betweenness backward).
+    Built only when ``device_graph(..., blocked=True)`` — the tiles are
+    dense, so this trades O(T * Bd * Bs) memory for MXU streaming.
     """
 
     out_store: Optional[EdgeChunkStore]
@@ -136,6 +145,8 @@ class SemGraph:
     in_degree: Optional[jnp.ndarray]
     n: int = dataclasses.field(metadata=dict(static=True))
     m: int = dataclasses.field(metadata=dict(static=True))
+    out_blocked: Optional[object] = None  # kernels.spmv.BlockedGraph
+    out_blocked_rev: Optional[object] = None
 
 
 def build_store(
@@ -182,12 +193,44 @@ def build_store(
 
 
 def device_graph(
-    g: Graph, *, chunk_size: int = 4096, pull: bool = True, push: bool = True
+    g: Graph,
+    *,
+    chunk_size: int = 4096,
+    pull: bool = True,
+    push: bool = True,
+    blocked: bool = False,
+    blocked_reverse: bool = False,
+    bd: int = 128,
+    bs: int = 128,
+    blocked_semiring: str = "plus_times",
 ) -> SemGraph:
-    """Build the full device-resident SEM view of ``g``."""
+    """Build the full device-resident SEM view of ``g``.
+
+    ``blocked=True`` additionally builds the dense-tile forward operator
+    view consumed by the engine's ``backend='blocked'`` Pallas path
+    (``bd``/``bs`` are the tile dims, ``blocked_semiring`` the tile
+    encoding — 'plus_times' also serves boolean or_and frontiers; use
+    'bool' occupancy tiles for exact or_and on weighted graphs, 'min_plus'
+    for shortest-path semirings).  ``blocked_reverse=True`` also builds the
+    transposed view needed by reverse flows (betweenness backward) — off by
+    default since it doubles the dense-tile footprint.
+    """
 
     def _pad_indptr(ip: np.ndarray) -> jnp.ndarray:
         return jnp.asarray(np.concatenate([ip, ip[-1:]]).astype(np.int32))
+
+    out_blocked = out_blocked_rev = None
+    if blocked:
+        from ..kernels.spmv import build_blocked
+
+        out_blocked = build_blocked(
+            g, bd=bd, bs=bs, direction="out", semiring=blocked_semiring
+        )
+        if blocked_reverse:
+            out_blocked_rev = build_blocked(
+                g, bd=bd, bs=bs, direction="out", semiring=blocked_semiring,
+                reverse=True,
+            )
 
     has_in = g.in_indptr is not None
     return SemGraph(
@@ -207,6 +250,8 @@ def device_graph(
         in_degree=jnp.asarray(g.in_degree) if has_in else None,
         n=g.n,
         m=g.m,
+        out_blocked=out_blocked,
+        out_blocked_rev=out_blocked_rev,
     )
 
 

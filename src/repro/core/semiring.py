@@ -55,6 +55,16 @@ class Semiring:
             return at.max(contrib)
         raise ValueError(f"unknown combine {self.combine!r}")
 
+    def combine_elem(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+        """Elementwise form of the scatter reduction (same dispatch)."""
+        if self.combine == "add":
+            return a + b
+        if self.combine == "min":
+            return jnp.minimum(a, b)
+        if self.combine == "max":
+            return jnp.maximum(a, b)
+        raise ValueError(f"unknown combine {self.combine!r}")
+
     def neutral_like(self, x: jnp.ndarray, n_rows: int) -> jnp.ndarray:
         """An identity-filled output buffer with ``n_rows`` rows."""
         shape = (n_rows,) + x.shape[1:]

@@ -1,0 +1,26 @@
+"""Compat layer over JAX Pallas TPU API renames.
+
+JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and
+back-deprecated the old spelling).  The installed JAX only carries one of
+the two names depending on version; resolve whichever exists once so kernel
+call sites never touch the spelling again.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["tpu_compiler_params"]
+
+_COMPILER_PARAMS_CLS = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+if _COMPILER_PARAMS_CLS is None:  # pragma: no cover - future API drift
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; update repro.kernels.pallas_compat for this JAX"
+    )
+
+
+def tpu_compiler_params(**kwargs):
+    """Build TPU compiler params under whichever class this JAX ships."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

@@ -1,4 +1,17 @@
-from .ops import BlockedGraph, blocked_spmv, build_blocked
+from .ops import (
+    BlockedGraph,
+    blocked_spmv,
+    build_blocked,
+    default_interpret,
+    tile_activity,
+)
 from .ref import blocked_spmv_ref
 
-__all__ = ["BlockedGraph", "blocked_spmv", "build_blocked", "blocked_spmv_ref"]
+__all__ = [
+    "BlockedGraph",
+    "blocked_spmv",
+    "build_blocked",
+    "blocked_spmv_ref",
+    "default_interpret",
+    "tile_activity",
+]

@@ -42,6 +42,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..pallas_compat import tpu_compiler_params
+
 __all__ = ["spmv_pallas"]
 
 _NEG = -3.0e38
@@ -111,7 +113,8 @@ def spmv_pallas(
     """
     T, Bd, Bs = tiles.shape
     nSB, _, K = x_blocks.shape
-    kernel = _kernel_plus_times if semiring == "plus_times" else _kernel_min_plus
+    # 'bool' occupancy tiles accumulate 0/1 mass on the plus_times kernel.
+    kernel = _kernel_min_plus if semiring == "min_plus" else _kernel_plus_times
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=5,
@@ -137,7 +140,7 @@ def spmv_pallas(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_dst_blocks, Bd, K), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

@@ -11,6 +11,14 @@ This mirrors FlashGraph's edge-page layout: a tile is a "page", the per-tile
 ``sbid`` is the page's vertex range, and the frontier-activity vector decides
 which pages are fetched.  ``blocked_spmv`` counts fetched/skipped tiles so
 the kernel path reports the same I/O metrics as the jnp engine.
+
+Frontier granularity: activity can key on **source** blocks (push-style —
+a tile is fetched iff its column range holds an active vertex) or on
+**destination** blocks (pull-style — a tile is fetched iff its row range
+holds an active vertex); see ``blocked_spmv(active_on=...)``.  ``reverse``
+tiling transposes the operator (rows = sources, columns = destinations) for
+message flows that run against the edge direction, e.g. betweenness
+backward propagation.
 """
 from __future__ import annotations
 
@@ -25,7 +33,18 @@ import numpy as np
 from ...graph.csr import Graph
 from .kernel import spmv_pallas
 
-__all__ = ["BlockedGraph", "build_blocked", "blocked_spmv"]
+__all__ = [
+    "BlockedGraph",
+    "build_blocked",
+    "blocked_spmv",
+    "default_interpret",
+    "tile_activity",
+]
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode everywhere except a real TPU backend."""
+    return jax.default_backend() != "tpu"
 
 
 @jax.tree_util.register_dataclass
@@ -38,6 +57,7 @@ class BlockedGraph:
     sbid: jnp.ndarray  # [T] int32 source block ids
     first: jnp.ndarray  # [T] int32 — tile starts a new dst block
     last: jnp.ndarray  # [T] int32 — tile ends its dst block
+    nnz: jnp.ndarray  # [T] int32 — edge records baked into each tile
     n: int = dataclasses.field(metadata=dict(static=True))
     bd: int = dataclasses.field(metadata=dict(static=True))
     bs: int = dataclasses.field(metadata=dict(static=True))
@@ -63,12 +83,21 @@ def build_blocked(
     bs: int = 128,
     direction: str = "out",
     semiring: str = "plus_times",
+    reverse: bool = False,
 ) -> BlockedGraph:
     """Tile ``g``'s edges into dense (bd, bs) blocks (host side, numpy).
 
     ``direction='out'`` builds y[dst] (+)= x[src] tiles (push); ``'in'``
-    transposes the roles.  Absent edges hold the semiring annihilator
-    (0 for plus_times, +inf for min_plus).
+    sources the same operator from the in-CSR.  ``reverse=True`` transposes
+    the operator — y[src] (+)= x[dst] — which is the tile view betweenness
+    backward propagation streams (messages against the edge direction).
+    Absent edges hold the semiring annihilator (0 for plus_times/bool, +inf
+    for min_plus).
+
+    ``semiring='bool'`` builds *occupancy* tiles: every edge slot holds 1
+    regardless of weights, so boolean (or_and) frontiers are exact even on
+    weighted graphs with zero or negative weights.  They run on the
+    plus_times kernel.
     """
     if direction == "out":
         indptr, indices, w = g.indptr, g.indices, g.weights
@@ -80,30 +109,44 @@ def build_blocked(
     dst = indices.astype(np.int64)
     if direction == "in":  # in-CSR rows are destinations
         src, dst = dst, src
-    wv = np.ones(len(src), np.float32) if w is None else w.astype(np.float32)
+    if w is None or semiring == "bool":
+        # Unweighted edges carry the semiring's edge_op identity: 1 under
+        # plus_times (y += 1 * x), 0 under min_plus (y = min(0 + x)) —
+        # matching sem_spmv/coo semantics where a missing weight is a no-op.
+        # 'bool' tiles ignore weights entirely (occupancy = 1 per edge).
+        fill = 0.0 if semiring == "min_plus" else 1.0
+        wv = np.full(len(src), fill, np.float32)
+    else:
+        wv = w.astype(np.float32)
 
-    db, sb = dst // bd, src // bs
+    # Tile coordinates: rows are the scatter side, columns the gather side.
+    row, col = (src, dst) if reverse else (dst, src)
+    db, sb = row // bd, col // bs
     key = db * (-(-n // bs)) + sb
     order = np.argsort(key, kind="stable")
-    db, sb, src, dst, wv = db[order], sb[order], src[order], dst[order], wv[order]
+    db, sb, row, col, wv = db[order], sb[order], row[order], col[order], wv[order]
     uniq, start = np.unique(key[order], return_index=True)
 
     T = max(1, len(uniq))
-    absent = 0.0 if semiring == "plus_times" else np.inf
+    absent = np.inf if semiring == "min_plus" else 0.0
     tiles = np.full((T, bd, bs), absent, np.float32)
     dbid = np.zeros(T, np.int32)
     sbid = np.zeros(T, np.int32)
+    nnz = np.zeros(T, np.int32)
     if len(uniq):
         ends = np.append(start[1:], len(db))
         for t, (s0, s1) in enumerate(zip(start, ends)):
             dbid[t] = db[s0]
             sbid[t] = sb[s0]
-            rows = (dst[s0:s1] - db[s0] * bd).astype(np.int64)
-            cols = (src[s0:s1] - sb[s0] * bs).astype(np.int64)
-            if semiring == "plus_times":
-                np.add.at(tiles[t], (rows, cols), wv[s0:s1])
-            else:
+            nnz[t] = s1 - s0
+            rows = (row[s0:s1] - db[s0] * bd).astype(np.int64)
+            cols = (col[s0:s1] - sb[s0] * bs).astype(np.int64)
+            if semiring == "min_plus":
                 np.minimum.at(tiles[t], (rows, cols), wv[s0:s1])
+            elif semiring == "bool":
+                tiles[t][rows, cols] = 1.0  # occupancy, multi-edges idempotent
+            else:
+                np.add.at(tiles[t], (rows, cols), wv[s0:s1])
     first = np.ones(T, np.int32)
     first[1:] = (dbid[1:] != dbid[:-1]).astype(np.int32)
     last = np.ones(T, np.int32)
@@ -114,6 +157,7 @@ def build_blocked(
         sbid=jnp.asarray(sbid),
         first=jnp.asarray(first),
         last=jnp.asarray(last),
+        nnz=jnp.asarray(nnz),
         n=n,
         bd=bd,
         bs=bs,
@@ -137,23 +181,56 @@ def _blocked_spmv_jit(bg: BlockedGraph, x_blocks, act_tile, interpret: bool):
     )
 
 
+def tile_activity(
+    bg: BlockedGraph, active: jnp.ndarray, active_on: str = "src"
+) -> jnp.ndarray:
+    """int32[T] 0/1 — which tiles a frontier would fetch.
+
+    ``active_on='src'``: a tile is live iff its source block (columns)
+    intersects the frontier — push/multicast skipping (paper P1).
+    ``active_on='dst'``: a tile is live iff its destination block (rows)
+    intersects the frontier — pull skipping (only active destinations
+    fetch their in-edge pages).
+    """
+    n = bg.n
+    if active_on == "src":
+        pad = bg.n_src_blocks * bg.bs
+        ap = jnp.zeros(pad, bool).at[:n].set(active)
+        act_blk = ap.reshape(bg.n_src_blocks, bg.bs).any(axis=1)
+        return act_blk[bg.sbid].astype(jnp.int32)
+    if active_on == "dst":
+        pad = bg.n_dst_blocks * bg.bd
+        ap = jnp.zeros(pad, bool).at[:n].set(active)
+        act_blk = ap.reshape(bg.n_dst_blocks, bg.bd).any(axis=1)
+        return act_blk[bg.dbid].astype(jnp.int32)
+    raise ValueError(f"active_on must be 'src' or 'dst', got {active_on!r}")
+
+
 def blocked_spmv(
     bg: BlockedGraph,
     x: jnp.ndarray,
     active: Optional[jnp.ndarray] = None,
     *,
+    active_on: str = "src",
     interpret: bool = True,
 ) -> tuple[jnp.ndarray, dict]:
     """y = A (.) x over the blocked tiles, with frontier tile skipping.
 
     Args:
       x: [n] or [n, K] vertex state (K = multi-source lanes).
-      active: optional bool[n] frontier over *source* vertices; tiles whose
-        source block has no active vertex are skipped (fetch + compute).
+      active: optional bool[n] frontier; tiles disjoint from it are skipped
+        (fetch + compute).  With ``active_on='src'`` the frontier lives on
+        source vertices (columns; push multicast), with ``'dst'`` on
+        destination vertices (rows; pull gather).  Skipping is *block*
+        granular: an active block applies whole tiles, so callers needing
+        row/column-exact semantics mask ``x`` (or the output rows)
+        themselves — :func:`repro.core.engine.spmv` does exactly that.
 
     Returns:
-      (y [n] or [n, K] f32, stats) — stats counts fetched/skipped tiles and
-      tile bytes moved, the kernel-path analogue of ``core.sem.IOStats``.
+      (y [n] or [n, K] f32, stats) — stats counts fetched/skipped tiles,
+      tile bytes moved, and the edge records resident in fetched tiles
+      (``messages`` — block-granular, so >= the row-exact count), the
+      kernel-path analogue of ``core.sem.IOStats``.
     """
     squeeze = x.ndim == 1
     if squeeze:
@@ -161,18 +238,23 @@ def blocked_spmv(
     k = x.shape[1]
     n, bd, bs = bg.n, bg.bd, bg.bs
     pad_n = bg.n_src_blocks * bs
-    ident = 0.0 if bg.semiring == "plus_times" else jnp.inf
+    ident = jnp.inf if bg.semiring == "min_plus" else 0.0
     xp = jnp.full((pad_n, k), ident, x.dtype).at[:n].set(x)
     x_blocks = xp.reshape(bg.n_src_blocks, bs, k).astype(jnp.float32)
 
     if active is None:
         act_tile = jnp.ones(bg.num_tiles, jnp.int32)
     else:
-        ap = jnp.zeros(pad_n, bool).at[:n].set(active)
-        act_sb = ap.reshape(bg.n_src_blocks, bs).any(axis=1)
-        act_tile = act_sb[bg.sbid].astype(jnp.int32)
+        act_tile = tile_activity(bg, active, active_on)
 
     y_blocks = _blocked_spmv_jit(bg, x_blocks, act_tile, interpret)
+    # The grid walks only existing tiles, so a destination block owning NO
+    # tiles is never flushed and its output rows stay uninitialized (NaN in
+    # interpret mode, garbage on TPU).  Fill them with the accumulate
+    # identity, matching what an all-absent tile would have flushed.
+    ident_out = jnp.inf if bg.semiring == "min_plus" else 0.0
+    has_db = jnp.zeros(bg.n_dst_blocks, bool).at[bg.dbid].set(True)
+    y_blocks = jnp.where(has_db[:, None, None], y_blocks, ident_out)
     y = y_blocks.reshape(bg.n_dst_blocks * bd, k)[:n]
     if squeeze:
         y = y[:, 0]
@@ -181,5 +263,6 @@ def blocked_spmv(
         "tiles_fetched": fetched,
         "tiles_skipped": bg.num_tiles - fetched,
         "tile_bytes": fetched * bd * bs * 4,
+        "messages": jnp.sum(bg.nnz * act_tile),
     }
     return y, stats

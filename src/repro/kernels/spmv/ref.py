@@ -16,27 +16,32 @@ __all__ = ["blocked_spmv_ref", "coo_spmv_ref"]
 
 
 def blocked_spmv_ref(
-    bg: BlockedGraph, x: jnp.ndarray, active: Optional[jnp.ndarray] = None
+    bg: BlockedGraph,
+    x: jnp.ndarray,
+    active: Optional[jnp.ndarray] = None,
+    *,
+    active_on: str = "src",
 ) -> jnp.ndarray:
     """Same tile-level math as the kernel, as one einsum + segment combine."""
+    from .ops import tile_activity
+
     squeeze = x.ndim == 1
     if squeeze:
         x = x[:, None]
     k = x.shape[1]
     n, bd, bs = bg.n, bg.bd, bg.bs
     pad_n = bg.n_src_blocks * bs
-    ident = 0.0 if bg.semiring == "plus_times" else jnp.inf
+    ident = jnp.inf if bg.semiring == "min_plus" else 0.0
     xp = jnp.full((pad_n, k), ident, jnp.float32).at[:n].set(x.astype(jnp.float32))
     x_blocks = xp.reshape(bg.n_src_blocks, bs, k)
 
     if active is None:
         act_tile = jnp.ones(bg.num_tiles, bool)
     else:
-        ap = jnp.zeros(pad_n, bool).at[:n].set(active)
-        act_tile = ap.reshape(bg.n_src_blocks, bs).any(axis=1)[bg.sbid]
+        act_tile = tile_activity(bg, active, active_on).astype(bool)
 
     xin = x_blocks[bg.sbid]  # [T, bs, k]
-    if bg.semiring == "plus_times":
+    if bg.semiring != "min_plus":  # plus_times and bool occupancy tiles
         contrib = jnp.einsum("tds,tsk->tdk", bg.tiles, xin)
         contrib = jnp.where(act_tile[:, None, None], contrib, 0.0)
         y_blocks = (

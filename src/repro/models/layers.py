@@ -25,6 +25,7 @@ from .param import Annot, Mk
 
 __all__ = [
     "rmsnorm",
+    "residual_add",
     "init_rmsnorm",
     "init_mlp",
     "mlp",
@@ -34,6 +35,25 @@ __all__ = [
     "rope",
     "apply_rope",
 ]
+
+
+def residual_add(x: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """``x + h`` on the residual stream with fusion-proof bf16 rounding.
+
+    XLA's excess-precision folding elides f32->bf16->f32 round-trips inside
+    a compiled unit, so a block output feeding the residual rounds to bf16
+    at op granularity when run eagerly (python-unrolled layers) but stays
+    f32 when the whole layer body is compiled (lax.scan / lax.cond).  The
+    two executions then drift apart layer over layer — the zamba2
+    scan-vs-unroll divergence.  ``lax.reduce_precision`` is semantically a
+    rounding, so the simplifier must keep it: pinning both the block output
+    and the sum makes compiled and eager residual threading bit-identical
+    (it is a numeric no-op on values already materialized in bf16).
+    """
+    if x.dtype != jnp.bfloat16:
+        return x + h
+    h = jax.lax.reduce_precision(h, 8, 7)  # bf16: 8 exp / 7 mantissa bits
+    return jax.lax.reduce_precision(x + h.astype(x.dtype), 8, 7)
 
 
 def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:

@@ -37,7 +37,16 @@ from .attention import (
     init_kv_cache,
     project_kv,
 )
-from .layers import embed, init_embedding, init_mlp, init_rmsnorm, mlp, rmsnorm, unembed
+from .layers import (
+    embed,
+    init_embedding,
+    init_mlp,
+    init_rmsnorm,
+    mlp,
+    residual_add,
+    rmsnorm,
+    unembed,
+)
 from .mamba2 import SSMCache, init_mamba2, init_ssm_cache, mamba2_decode, mamba2_full
 from .moe import init_moe, moe_apply
 from .param import Mk, merge_axes, split
@@ -299,14 +308,14 @@ class Model:
                 bp = self._constrain_bp(bp)
                 h = rmsnorm(x, bp["ln1"]["w"])
                 h = attn_full(bp["attn"], h, cfg, positions, window=window)
-                x = x + h
+                x = residual_add(x, h)
                 h = rmsnorm(x, bp["ln2"]["w"])
                 if cfg.family == "moe":
                     h, a = moe_apply(bp["moe"], h, cfg)
                     aux = aux + a
                 else:
                     h = mlp(bp["mlp"], h, cfg)
-                return self._constrain(x + h), aux
+                return self._constrain(residual_add(x, h)), aux
 
             if unroll:
                 layer = _maybe_remat(layer, remat, static_argnums=(3,))
@@ -329,7 +338,7 @@ class Model:
             def layer(x, bp):
                 bp = self._constrain_bp(bp)
                 h = rmsnorm(x, bp["ln"]["w"])
-                return self._constrain(x + mamba2_full(bp["ssm"], h, cfg))
+                return self._constrain(residual_add(x, mamba2_full(bp["ssm"], h, cfg)))
 
             if unroll:
                 layer = _maybe_remat(layer, remat)
@@ -343,16 +352,18 @@ class Model:
             every = cfg.attn_every
             shared = self._constrain_bp(params["shared"], "shared")
 
+            # residual_add (not bare +) so the scanned (compiled layer body)
+            # and python-unrolled stacks thread bit-identical bf16 residuals.
             def shared_attn(x):
                 h = rmsnorm(x, shared["ln1"]["w"])
-                x = x + attn_full(shared["attn"], h, cfg, positions)
+                x = residual_add(x, attn_full(shared["attn"], h, cfg, positions))
                 h = rmsnorm(x, shared["ln2"]["w"])
-                return self._constrain(x + mlp(shared["mlp"], h, cfg))
+                return self._constrain(residual_add(x, mlp(shared["mlp"], h, cfg)))
 
             def ssm_layer(x, bp):
                 bp = self._constrain_bp(bp)
                 h = rmsnorm(x, bp["ln"]["w"])
-                return self._constrain(x + mamba2_full(bp["ssm"], h, cfg))
+                return self._constrain(residual_add(x, mamba2_full(bp["ssm"], h, cfg)))
 
             if unroll:
                 ssm_layer_r = _maybe_remat(ssm_layer, remat)
@@ -384,12 +395,12 @@ class Model:
             def layer(x, bp):
                 bp = self._constrain_bp(bp)
                 h = rmsnorm(x, bp["ln1"]["w"])
-                x = x + attn_full(bp["self_attn"], h, cfg, positions)
+                x = residual_add(x, attn_full(bp["self_attn"], h, cfg, positions))
                 h = rmsnorm(x, bp["ln_x"]["w"])
                 ek, ev = project_kv(bp["cross_attn"], enc_out, cfg)
-                x = x + attn_cross(bp["cross_attn"], h, ek, ev, cfg)
+                x = residual_add(x, attn_cross(bp["cross_attn"], h, ek, ev, cfg))
                 h = rmsnorm(x, bp["ln2"]["w"])
-                return self._constrain(x + mlp(bp["mlp"], h, cfg))
+                return self._constrain(residual_add(x, mlp(bp["mlp"], h, cfg)))
 
             if unroll:
                 layer = _maybe_remat(layer, remat)
@@ -423,9 +434,9 @@ class Model:
         def layer(x, bp):
             bp = self._constrain_bp(bp, "encoder")
             h = rmsnorm(x, bp["ln1"]["w"])
-            x = x + attn_full(bp["attn"], h, cfg, positions, causal=False)
+            x = residual_add(x, attn_full(bp["attn"], h, cfg, positions, causal=False))
             h = rmsnorm(x, bp["ln2"]["w"])
-            return self._constrain(x + mlp(bp["mlp"], h, cfg))
+            return self._constrain(residual_add(x, mlp(bp["mlp"], h, cfg)))
 
         if unroll:
             for l in range(cfg.encoder_layers):
@@ -502,41 +513,41 @@ class Model:
             if cfg.family in ("dense", "vlm", "moe"):
                 h = rmsnorm(x, bp["ln1"]["w"])
                 h, lc = attn_decode(bp["attn"], h, lc, cfg, positions, windows[l])
-                x = x + h
+                x = residual_add(x, h)
                 h = rmsnorm(x, bp["ln2"]["w"])
                 if cfg.family == "moe":
                     h, _ = moe_apply(bp["moe"], h, cfg)
                 else:
                     h = mlp(bp["mlp"], h, cfg)
-                x = x + h
+                x = residual_add(x, h)
             elif cfg.family == "ssm":
                 h = rmsnorm(x, bp["ln"]["w"])
                 h, lc = mamba2_decode(bp["ssm"], h, lc, cfg)
-                x = x + h
+                x = residual_add(x, h)
             elif cfg.family == "hybrid":
                 h = rmsnorm(x, bp["ln"]["w"])
                 h, ssm_c = mamba2_decode(bp["ssm"], h, lc["ssm"], cfg)
-                x = x + h
+                x = residual_add(x, h)
                 lc = dict(lc)
                 lc["ssm"] = ssm_c
                 if "attn" in lc:
                     shared = params["shared"]
                     h = rmsnorm(x, shared["ln1"]["w"])
                     h, attn_c = attn_decode(shared["attn"], h, lc["attn"], cfg, positions)
-                    x = x + h
+                    x = residual_add(x, h)
                     h = rmsnorm(x, shared["ln2"]["w"])
-                    x = x + mlp(shared["mlp"], h, cfg)
+                    x = residual_add(x, mlp(shared["mlp"], h, cfg))
                     lc["attn"] = attn_c
             elif cfg.family == "encdec":
                 h = rmsnorm(x, bp["ln1"]["w"])
                 h, self_c = attn_decode(bp["self_attn"], h, lc["self"], cfg, positions)
-                x = x + h
+                x = residual_add(x, h)
                 h = rmsnorm(x, bp["ln_x"]["w"])
-                x = x + attn_cross(
+                x = residual_add(x, attn_cross(
                     bp["cross_attn"], h, lc["cross_k"], lc["cross_v"], cfg
-                )
+                ))
                 h = rmsnorm(x, bp["ln2"]["w"])
-                x = x + mlp(bp["mlp"], h, cfg)
+                x = residual_add(x, mlp(bp["mlp"], h, cfg))
                 lc = dict(lc)
                 lc["self"] = self_c
             new_layers.append(lc)
@@ -642,13 +653,13 @@ class Model:
                 kp = pos1d[..., None, :]
                 mask = (kp <= qp) & ((window == 0) | (kp > qp - window))
                 out = _sdpa(q, k, v, mask, cfg)
-            x = x + jnp.einsum("bshk,hkd->bsd", out, bp["attn"]["wo"])
+            x = residual_add(x, jnp.einsum("bshk,hkd->bsd", out, bp["attn"]["wo"]))
             h = rmsnorm(x, bp["ln2"]["w"])
             if cfg.family == "moe":
                 hh, _ = moe_apply(bp["moe"], h, cfg)
             else:
                 hh = mlp(bp["mlp"], h, cfg)
-            return (self._constrain(x + hh),), (
+            return (self._constrain(residual_add(x, hh)),), (
                 k.astype(jnp.bfloat16),
                 v.astype(jnp.bfloat16),
             )
@@ -697,7 +708,7 @@ class Model:
                 bp = self._constrain_bp(bp)
                 h = rmsnorm(x, bp["ln"]["w"])
                 y, st = mamba2_full(bp["ssm"], h, cfg, return_state=True)
-                return (self._constrain(x + y),), st
+                return (self._constrain(residual_add(x, y)),), st
 
             if unroll:
                 sts = []
@@ -727,14 +738,14 @@ class Model:
                 bp = self._constrain_bp(bp)
                 h = rmsnorm(x, bp["ln"]["w"])
                 y, st = mamba2_full(bp["ssm"], h, cfg, return_state=True)
-                x = x + y
+                x = residual_add(x, y)
 
                 def with_attn(x):
                     h = rmsnorm(x, shared["ln1"]["w"])
                     _, k, v = _project_qkv(shared["attn"], h, cfg, positions)
-                    x = x + attn_full(shared["attn"], h, cfg, positions)
+                    x = residual_add(x, attn_full(shared["attn"], h, cfg, positions))
                     h2 = rmsnorm(x, shared["ln2"]["w"])
-                    return self._constrain(x + mlp(shared["mlp"], h2, cfg)), k, v
+                    return self._constrain(residual_add(x, mlp(shared["mlp"], h2, cfg))), k, v
 
                 def no_attn(x):
                     z = jnp.zeros((b, s, kv, hd), jnp.bfloat16)
@@ -809,31 +820,31 @@ class Model:
             if cfg.family in ("dense", "vlm", "moe"):
                 h = rmsnorm(x, bp["ln1"]["w"])
                 lc = fill_kv(bp["attn"], h, lc, windows[l])
-                x = x + attn_full(bp["attn"], h, cfg, positions, windows[l])
+                x = residual_add(x, attn_full(bp["attn"], h, cfg, positions, windows[l]))
                 h = rmsnorm(x, bp["ln2"]["w"])
                 if cfg.family == "moe":
                     hh, _ = moe_apply(bp["moe"], h, cfg)
                 else:
                     hh = mlp(bp["mlp"], h, cfg)
-                x = self._constrain(x + hh)
+                x = self._constrain(residual_add(x, hh))
             elif cfg.family == "ssm":
                 h = rmsnorm(x, bp["ln"]["w"])
                 y, st = mamba2_full(bp["ssm"], h, cfg, return_state=True)
-                x = x + y
+                x = residual_add(x, y)
                 lc = st
             elif cfg.family == "hybrid":
                 h = rmsnorm(x, bp["ln"]["w"])
                 y, st = mamba2_full(bp["ssm"], h, cfg, return_state=True)
-                x = x + y
+                x = residual_add(x, y)
                 lc = dict(lc)
                 lc["ssm"] = st
                 if "attn" in lc:
                     shared = params["shared"]
                     h = rmsnorm(x, shared["ln1"]["w"])
                     lc["attn"] = fill_kv(shared["attn"], h, lc["attn"], 0)
-                    x = x + attn_full(shared["attn"], h, cfg, positions)
+                    x = residual_add(x, attn_full(shared["attn"], h, cfg, positions))
                     h = rmsnorm(x, shared["ln2"]["w"])
-                    x = x + mlp(shared["mlp"], h, cfg)
+                    x = residual_add(x, mlp(shared["mlp"], h, cfg))
             elif cfg.family == "encdec":
                 if l == 0:
                     enc_out = self.encode(params, batch)
@@ -841,13 +852,13 @@ class Model:
                 h = rmsnorm(x, bp["ln1"]["w"])
                 lc = dict(lc)
                 lc["self"] = fill_kv(bp["self_attn"], h, lc["self"], 0)
-                x = x + attn_full(bp["self_attn"], h, cfg, positions)
+                x = residual_add(x, attn_full(bp["self_attn"], h, cfg, positions))
                 h = rmsnorm(x, bp["ln_x"]["w"])
                 ek, ev = project_kv(bp["cross_attn"], enc_out, cfg)
                 lc["cross_k"], lc["cross_v"] = ek, ev
-                x = x + attn_cross(bp["cross_attn"], h, ek, ev, cfg)
+                x = residual_add(x, attn_cross(bp["cross_attn"], h, ek, ev, cfg))
                 h = rmsnorm(x, bp["ln2"]["w"])
-                x = x + mlp(bp["mlp"], h, cfg)
+                x = residual_add(x, mlp(bp["mlp"], h, cfg))
             layers[l] = lc
         return {"layers": tuple(layers), "len": jnp.asarray(s, jnp.int32)}
 

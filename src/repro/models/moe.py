@@ -33,6 +33,25 @@ from .param import Mk
 __all__ = ["init_moe", "moe_ffn", "moe_ffn_ep", "moe_capacity"]
 
 
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """shard_map across JAX spellings: ``jax.shard_map(check_vma=...)`` on
+    new JAX, ``jax.experimental.shard_map.shard_map(check_rep=...)`` on old.
+    Replication checking is off either way (the EP body mixes pmean'd and
+    sharded outputs)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False)
+        except TypeError:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+    from jax.experimental.shard_map import shard_map as legacy_sm
+
+    return legacy_sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 def init_moe(mk: Mk, cfg: ModelConfig):
     d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
     return {
@@ -194,12 +213,11 @@ def moe_ffn_ep(
             P("model", dpe, None),
             P("model", None, dpe),
         )
-    return jax.shard_map(
+    return _shard_map(
         local,
         mesh=mesh,
         in_specs=(x_spec, P(None, None)) + w_specs,
         out_specs=(x_spec, P()),
-        check_vma=False,
     )(x, p["router"].astype(jnp.float32), p["up"], p["gate"], p["down"])
 
 

@@ -1,0 +1,241 @@
+"""Scan-vs-blocked backend parity: the engine's two multicast executions
+must agree on results AND on the direction of their I/O accounting.
+
+The blocked backend streams dense Pallas tiles (interpret mode on CPU);
+row-exactness is restored by the engine's masking, so outputs must match
+the chunked scan path to float tolerance on ANY frontier.  ``messages``
+(edge contributions from active majors) is row-exact on both paths and
+must match exactly; skip counters count different fetch units (chunks vs
+tiles) but must both be zero on a full frontier and both positive on a
+block-confined sparse one.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algs import bc_multisource, bfs_multi, pagerank_pull, pagerank_push
+from repro.core import OR_AND, PLUS_TIMES, device_graph, hybrid_spmv, spmv
+from repro.graph.generators import erdos_renyi, rmat
+
+pytestmark = pytest.mark.kernel
+
+
+@pytest.fixture(scope="module")
+def sg():
+    g = erdos_renyi(200, 1500, seed=1)
+    return device_graph(g, chunk_size=256, blocked=True, blocked_reverse=True,
+                        bd=32, bs=32)
+
+
+def _frontiers(n):
+    full = jnp.ones(n, bool)
+    sparse = jnp.asarray(np.arange(n) < 20)  # confined to source block 0
+    return {"full": full, "sparse": sparse}
+
+
+@pytest.mark.parametrize("direction", ["out", "in"])
+@pytest.mark.parametrize("kind", ["full", "sparse"])
+def test_spmv_scan_vs_blocked_parity(sg, direction, kind):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.random(sg.n).astype(np.float32))
+    active = _frontiers(sg.n)[kind]
+    y_s, st_s = spmv(sg, x, active, PLUS_TIMES, direction=direction,
+                     backend="scan")
+    y_b, st_b = spmv(sg, x, active, PLUS_TIMES, direction=direction,
+                     backend="blocked")
+    np.testing.assert_allclose(
+        np.asarray(y_s), np.asarray(y_b), atol=1e-5, rtol=1e-5
+    )
+    # messages are row-exact on both backends: identical.
+    assert int(st_s.messages) == int(st_b.messages)
+    if kind == "full":
+        # nothing skippable on a full frontier, in either fetch unit.
+        assert int(st_s.chunks_skipped) == 0
+        assert int(st_b.chunks_skipped) == 0
+    else:
+        # a block-confined frontier must elide fetches on both backends.
+        assert int(st_s.chunks_skipped) > 0
+        assert int(st_b.chunks_skipped) > 0
+        # one I/O request per active vertex whose edges exist.
+        assert int(st_b.requests) <= int(jnp.sum(active))
+    assert int(st_b.records) > 0
+
+
+@pytest.mark.parametrize("kind", ["full", "sparse"])
+def test_spmv_reverse_parity(sg, kind):
+    """Reverse flow (betweenness backward: y[src] += x[dst]) through the
+    transposed tile view equals the scan path's reverse gather."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.random(sg.n).astype(np.float32))
+    active = _frontiers(sg.n)[kind]
+    y_s, st_s = spmv(sg, x, active, PLUS_TIMES, direction="out",
+                     reverse=True, backend="scan")
+    y_b, st_b = spmv(sg, x, active, PLUS_TIMES, direction="out",
+                     reverse=True, backend="blocked")
+    np.testing.assert_allclose(
+        np.asarray(y_s), np.asarray(y_b), atol=1e-5, rtol=1e-5
+    )
+    assert int(st_s.messages) == int(st_b.messages)
+
+
+def test_spmv_or_and_klane_parity(sg):
+    """Boolean multi-lane frontier push (the BFS step) is exact, not just
+    close: the blocked path thresholds 0/1 tile mass."""
+    rng = np.random.default_rng(7)
+    xk = jnp.asarray(rng.random((sg.n, 4)) < 0.2)
+    active = jnp.asarray(rng.random(sg.n) < 0.3)
+    y_s, _ = spmv(sg, xk, active, OR_AND, direction="out", backend="scan")
+    y_b, _ = spmv(sg, xk, active, OR_AND, direction="out", backend="blocked")
+    assert y_b.dtype == jnp.bool_
+    assert bool(jnp.all(y_s == y_b))
+
+
+def test_hybrid_reaches_blocked_and_p2p(sg):
+    """hybrid_spmv(backend='blocked'): dense frontiers run the tile kernel
+    (tile-unit skip accounting), sparse frontiers still fall to p2p."""
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.random(sg.n).astype(np.float32))
+    full = jnp.ones(sg.n, bool)
+    y_h, st_h = hybrid_spmv(sg, x, full, PLUS_TIMES, direction="out",
+                            vcap=sg.n, ecap=4 * sg.m, backend="blocked")
+    y_b, st_b = spmv(sg, x, full, PLUS_TIMES, direction="out",
+                     backend="blocked")
+    np.testing.assert_allclose(np.asarray(y_h), np.asarray(y_b), atol=1e-5)
+    assert int(st_h.records) == int(st_b.records)
+
+    sparse = jnp.zeros(sg.n, bool).at[3].set(True)
+    y_p, st_p = hybrid_spmv(sg, x, sparse, PLUS_TIMES, direction="out",
+                            vcap=sg.n, ecap=4 * sg.m, backend="blocked")
+    y_s, _ = spmv(sg, x, sparse, PLUS_TIMES, direction="out", backend="scan")
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_s), atol=1e-5)
+    # p2p moved only the one live row, far below a whole tile's records.
+    assert int(st_p.records) == int(sg.out_degree[3])
+
+
+def test_spmv_min_plus_parity():
+    """min_plus tiles (absent = +inf, unweighted edge = 0 addend) must
+    match the scan path wherever either side is finite."""
+    g = erdos_renyi(100, 600, seed=4)
+    sgm = device_graph(g, chunk_size=128, blocked=True, bd=32, bs=32,
+                       blocked_semiring="min_plus")
+    from repro.core import MIN_PLUS
+
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.random(100).astype(np.float32))
+    for active in _frontiers(100).values():
+        y_s = np.asarray(spmv(sgm, x, active, MIN_PLUS, backend="scan")[0])
+        y_b = np.asarray(spmv(sgm, x, active, MIN_PLUS, backend="blocked")[0])
+        assert (np.isinf(y_s) == np.isinf(y_b)).all()
+        fin = ~np.isinf(y_s)
+        np.testing.assert_allclose(y_s[fin], y_b[fin], atol=1e-5)
+
+
+def test_or_and_weighted_graph():
+    """Boolean reachability must survive hostile weights: plus_times tiles
+    bake real weights into the matmul mass (a 0 or cancelling negative
+    weight would drop an edge), so weighted graphs must use the 'bool'
+    occupancy tiles — and those must match the scan path exactly."""
+    from repro.graph.csr import from_edges
+
+    src = np.array([0, 0, 1, 2])
+    dst = np.array([1, 2, 3, 3])
+    w = np.array([0.0, -1.0, 2.0, 1.0], np.float32)
+    g = from_edges(src, dst, n=4, weights=w)
+    x = jnp.asarray([[True], [False], [False], [False]])
+    act = jnp.ones(4, bool)
+
+    sg_pt = device_graph(g, chunk_size=4, blocked=True, bd=4, bs=4)
+    y_s, _ = spmv(sg_pt, x, act, OR_AND, direction="out", backend="scan")
+    with pytest.raises(ValueError, match="bool"):
+        spmv(sg_pt, x, act, OR_AND, direction="out", backend="blocked")
+    sg_bool = device_graph(g, chunk_size=4, blocked=True, bd=4, bs=4,
+                           blocked_semiring="bool")
+    y_b, _ = spmv(sg_bool, x, act, OR_AND, direction="out", backend="blocked")
+    assert bool(jnp.all(y_b == y_s)), (y_b, y_s)
+
+
+def test_blocked_requires_views():
+    g = erdos_renyi(64, 256, seed=0)
+    sg_plain = device_graph(g, chunk_size=64)  # no blocked views
+    x = jnp.ones(64)
+    with pytest.raises(ValueError, match="blocked"):
+        spmv(sg_plain, x, jnp.ones(64, bool), PLUS_TIMES, backend="blocked")
+    # forward-only views: reverse flow must ask for the opt-in rev build
+    sg_fwd = device_graph(g, chunk_size=64, blocked=True, bd=16, bs=16)
+    with pytest.raises(ValueError, match="blocked_reverse"):
+        spmv(sg_fwd, x, jnp.ones(64, bool), PLUS_TIMES, reverse=True,
+             backend="blocked")
+
+
+def test_blocked_empty_dst_blocks():
+    """Destination blocks owning no tiles must come back as the semiring
+    identity, not uninitialized memory (the kernel grid never visits
+    them)."""
+    from repro.core import MIN_PLUS
+    from repro.graph.csr import from_edges
+
+    # 64 vertices, edges only among 0..3 -> dst blocks 1..3 own no tiles.
+    src = np.array([0, 1, 2, 3])
+    dst = np.array([1, 2, 3, 0])
+    g = from_edges(src, dst, n=64)
+    x = jnp.asarray(np.random.default_rng(0).random(64).astype(np.float32))
+    act = jnp.ones(64, bool)
+
+    sg_pt = device_graph(g, chunk_size=16, blocked=True, bd=16, bs=16)
+    y_s, _ = spmv(sg_pt, x, act, PLUS_TIMES, backend="scan")
+    y_b, _ = spmv(sg_pt, x, act, PLUS_TIMES, backend="blocked")
+    assert np.isfinite(np.asarray(y_b)).all()
+    np.testing.assert_allclose(np.asarray(y_s), np.asarray(y_b), atol=1e-6)
+
+    sg_mp = device_graph(g, chunk_size=16, blocked=True, bd=16, bs=16,
+                         blocked_semiring="min_plus")
+    y_s, _ = spmv(sg_mp, x, act, MIN_PLUS, backend="scan")
+    y_b, _ = spmv(sg_mp, x, act, MIN_PLUS, backend="blocked")
+    ys, yb = np.asarray(y_s), np.asarray(y_b)
+    assert not np.isnan(yb).any()
+    assert (np.isinf(ys) == np.isinf(yb)).all()  # untouched rows = +inf
+    fin = ~np.isinf(ys)
+    np.testing.assert_allclose(ys[fin], yb[fin], atol=1e-6)
+
+
+# ------------------------------------------------ algorithm-level parity
+@pytest.fixture(scope="module")
+def sg_rmat():
+    g = rmat(7, edge_factor=8, seed=2)  # n=128, skewed
+    return device_graph(g, chunk_size=256, blocked=True, blocked_reverse=True,
+                        bd=32, bs=32)
+
+
+def test_pagerank_backend_parity(sg_rmat):
+    r_s, io_s, it_s = jax.jit(
+        lambda: pagerank_push(sg_rmat, tol=1e-4, backend="scan"))()
+    r_b, io_b, it_b = jax.jit(
+        lambda: pagerank_push(sg_rmat, tol=1e-4, backend="blocked"))()
+    assert int(it_s) == int(it_b)
+    np.testing.assert_allclose(np.asarray(r_s), np.asarray(r_b), atol=1e-6)
+    assert int(io_s.messages) == int(io_b.messages)
+
+    p_s, _, _ = jax.jit(lambda: pagerank_pull(sg_rmat, tol=1e-4, backend="scan"))()
+    p_b, _, _ = jax.jit(lambda: pagerank_pull(sg_rmat, tol=1e-4, backend="blocked"))()
+    np.testing.assert_allclose(np.asarray(p_s), np.asarray(p_b), atol=1e-6)
+
+
+def test_bfs_backend_parity(sg_rmat):
+    src = jnp.asarray([0, 5, 17, 99], jnp.int32)
+    d_s, io_s, _ = jax.jit(lambda: bfs_multi(sg_rmat, src, backend="scan"))()
+    d_b, io_b, _ = jax.jit(lambda: bfs_multi(sg_rmat, src, backend="blocked"))()
+    assert bool(jnp.all(d_s == d_b))
+    assert int(io_s.messages) == int(io_b.messages)
+    # draining frontiers must actually skip tiles on the blocked path.
+    assert int(io_b.chunks_skipped) > 0
+
+
+def test_betweenness_backend_parity(sg_rmat):
+    src = jnp.asarray([0, 5, 17, 99], jnp.int32)
+    b_s, _, _ = jax.jit(lambda: bc_multisource(sg_rmat, src, backend="scan"))()
+    b_b, _, _ = jax.jit(lambda: bc_multisource(sg_rmat, src, backend="blocked"))()
+    scale = max(float(jnp.max(jnp.abs(b_s))), 1.0)
+    np.testing.assert_allclose(
+        np.asarray(b_s), np.asarray(b_b), atol=1e-4 * scale
+    )

@@ -8,6 +8,7 @@ machinery changes I/O, never answers.
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, don't abort -x runs
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

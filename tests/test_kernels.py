@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.kernel
+
 from repro.graph.generators import cycle_graph, erdos_renyi, rmat, star_graph
 from repro.kernels.decode_attn import decode_attention, decode_attention_ref
 from repro.kernels.spmv import blocked_spmv, blocked_spmv_ref, build_blocked

@@ -13,6 +13,9 @@ Invariants under test:
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't abort -x runs
 from hypothesis import given, settings, strategies as st
 
 from repro.core import device_graph, flat_spmv, sem_spmv
