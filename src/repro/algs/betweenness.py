@@ -45,7 +45,7 @@ class _FwdState(NamedTuple):
 
 
 def _forward(sg: SemGraph, sources: jnp.ndarray, max_iters: int,
-             backend: str = "scan"):
+             backend: str = "scan", chunk_cap: int | None = None):
     """Synchronous multi-source BFS with path counting.
 
     The K source lanes ride the engine's lane dimension — under
@@ -63,7 +63,7 @@ def _forward(sg: SemGraph, sources: jnp.ndarray, max_iters: int,
         active = jnp.any(s.frontier, axis=1)
         send = jnp.where(s.frontier, s.sigma, 0.0)
         recv, st = spmv(sg, send, active, PLUS_TIMES, direction="out",
-                        backend=backend)
+                        backend=backend, chunk_cap=chunk_cap)
         newly = (recv > 0) & (s.dist < 0)
         sigma = jnp.where(newly, recv, s.sigma)
         dist = jnp.where(newly, s.level + 1, s.dist)
@@ -82,7 +82,7 @@ def _forward(sg: SemGraph, sources: jnp.ndarray, max_iters: int,
 
 
 def _backward(sg: SemGraph, sigma, dist, max_level, max_iters,
-              backend: str = "scan"):
+              backend: str = "scan", chunk_cap: int | None = None):
     """Synchronous dependency accumulation, level = max_level-1 .. 0."""
     n, K = sigma.shape
 
@@ -94,7 +94,7 @@ def _backward(sg: SemGraph, sigma, dist, max_level, max_iters,
         recv_mask = dist == level
         active = jnp.any(recv_mask, axis=1)
         recv, st = spmv(sg, x, active, PLUS_TIMES, direction="out",
-                        reverse=True, backend=backend)
+                        reverse=True, backend=backend, chunk_cap=chunk_cap)
         delta = jnp.where(recv_mask, delta + sigma * recv, delta)
         io = (io + st)._replace(supersteps=io.supersteps + 1)
         return delta, level - 1, io
@@ -119,26 +119,30 @@ def _finish(delta, sources):
 
 def bc_multisource(
     sg: SemGraph, sources: jnp.ndarray, *, max_iters: int | None = None,
-    backend: str = "scan",
+    backend: str = "scan", chunk_cap: int | None = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
     """Synchronous multi-source Brandes. Returns (bc[n], IOStats, supersteps).
 
     ``backend='blocked'`` streams both the forward sigma pushes and the
     backward dependency pulls through the Pallas tile kernel (the backward
-    pass uses the transposed ``out_blocked_rev`` view).
+    pass uses the transposed ``out_blocked_rev`` view).  ``chunk_cap`` with
+    ``backend='compact'`` compacts both phases' chunk work-lists — the
+    per-level frontiers of Brandes are narrow, so most supersteps touch a
+    handful of chunks.
     """
     sources = jnp.asarray(sources, jnp.int32)
     max_iters = max_iters or sg.n + 1
-    fwd, fwd_iters = _forward(sg, sources, max_iters, backend)
+    fwd, fwd_iters = _forward(sg, sources, max_iters, backend, chunk_cap)
     max_level = jnp.max(jnp.where(fwd.dist < 0, -1, fwd.dist))
-    delta, bio = _backward(sg, fwd.sigma, fwd.dist, max_level, max_iters, backend)
+    delta, bio = _backward(sg, fwd.sigma, fwd.dist, max_level, max_iters,
+                           backend, chunk_cap)
     io = fwd.io + bio
     return _finish(delta, sources), io, fwd_iters + jnp.maximum(max_level, 0)
 
 
 def bc_unisource(
     sg: SemGraph, sources: jnp.ndarray, *, max_iters: int | None = None,
-    backend: str = "scan",
+    backend: str = "scan", chunk_cap: int | None = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
     """K separate single-source runs (the Fig. 6 baseline)."""
     sources = jnp.asarray(sources, jnp.int32)
@@ -147,7 +151,8 @@ def bc_unisource(
     steps = jnp.zeros((), jnp.int32)
     for i in range(sources.shape[0]):
         b, st, it = bc_multisource(
-            sg, sources[i : i + 1], max_iters=max_iters, backend=backend
+            sg, sources[i : i + 1], max_iters=max_iters, backend=backend,
+            chunk_cap=chunk_cap,
         )
         bc, io, steps = bc + b, io + st, steps + it
     return bc, io, steps

@@ -37,14 +37,19 @@ def bfs_multi(
     *,
     max_iters: int | None = None,
     backend: str = "scan",
+    chunk_cap: int | None = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
     """K concurrent BFS over the out-edges.
 
     Args:
       sources: int32[K] source vertex ids.
-      backend: 'scan' (chunked) or 'blocked' (Pallas tiles; the K lanes map
+      backend: 'scan' (chunked), 'compact' (frontier-compacted chunk
+        work-list — the early ramp-up and late drain of a BFS touch few
+        chunks, so supersteps cost ~active chunks instead of all chunks),
+        or 'blocked' / 'blocked_compact' (Pallas tiles; the K lanes map
         onto the kernel's multi-source lane dimension, so every fetched
         tile serves all K searches at once — §4.3 batching on the MXU).
+      chunk_cap: work-list capacity for the 'compact' backend.
 
     Returns:
       (dist int32[n, K] — UNREACHED where not reached, IOStats, supersteps).
@@ -61,7 +66,7 @@ def bfs_multi(
     def step(s: BFSState) -> tuple[BFSState, jnp.ndarray]:
         active = jnp.any(s.frontier, axis=1)
         nxt, st = spmv(sg, s.frontier, active, OR_AND, direction="out",
-                       backend=backend)
+                       backend=backend, chunk_cap=chunk_cap)
         newly = nxt & ~s.reached
         reached = s.reached | newly
         dist = jnp.where(newly, s.level + 1, s.dist)
@@ -82,11 +87,11 @@ def bfs_multi(
 
 def bfs_uni(
     sg: SemGraph, source: int, *, max_iters: int | None = None,
-    backend: str = "scan",
+    backend: str = "scan", chunk_cap: int | None = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
     """Single-source BFS (the K=1 degenerate case, for the Fig. 5 baseline)."""
     dist, io, iters = bfs_multi(
         sg, jnp.asarray([source], jnp.int32), max_iters=max_iters,
-        backend=backend,
+        backend=backend, chunk_cap=chunk_cap,
     )
     return dist[:, 0], io, iters

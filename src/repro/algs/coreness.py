@@ -43,6 +43,7 @@ def coreness(
     messaging: str = "hybrid",
     switch_fraction: float = 0.10,
     max_supersteps: int | None = None,
+    chunk_cap: int | None = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
     """k-core decomposition. Returns (core_number[n], IOStats, supersteps).
 
@@ -52,6 +53,11 @@ def coreness(
     ``min(deg[alive])`` with pruning (P3): intermediate k values cannot
     remove any vertex, so their supersteps (and their frontier scans) are
     pure waste.
+
+    Peeling frontiers are usually tiny (the vertices that just dropped to
+    degree k), so ``chunk_cap`` + ``messaging='hybrid'`` routes the
+    mid-density removals through the compact scan — the engine's three-way
+    dispatch (P2 paid in wall-clock, not just counters).
     """
     assert messaging in ("dense", "p2p", "hybrid")
     n = sg.n
@@ -79,6 +85,7 @@ def coreness(
                 vcap=vcap,
                 ecap=ecap,
                 switch_fraction=switch_fraction,
+                chunk_cap=chunk_cap,
             )
         return deg + delta.astype(jnp.int32), io + st
 

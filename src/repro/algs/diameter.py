@@ -36,19 +36,25 @@ def diameter_multisource(
     num_sources: int = 32,
     sweeps: int = 2,
     seed_vertex: int | None = None,
+    backend: str = "scan",
+    chunk_cap: int | None = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
     """Estimate the diameter with ``sweeps`` rounds of K-source BFS.
 
-    Returns (estimate, IOStats, supersteps).
+    ``backend``/``chunk_cap`` are forwarded to the underlying BFS — the
+    sweeps spend most supersteps on narrow frontiers, where the compact
+    backend pays.  Returns (estimate, IOStats, supersteps).
     """
     if seed_vertex is None:
         seed_vertex = int(jnp.argmax(sg.out_degree))
-    dist, io, iters = bfs_uni(sg, seed_vertex)
+    dist, io, iters = bfs_uni(sg, seed_vertex, backend=backend,
+                              chunk_cap=chunk_cap)
     estimate = _max_dist(dist)
     total_steps = iters
     for _ in range(sweeps):
         sources = _farthest(dist, num_sources)
-        dist_k, io_k, iters_k = bfs_multi(sg, sources)
+        dist_k, io_k, iters_k = bfs_multi(sg, sources, backend=backend,
+                                          chunk_cap=chunk_cap)
         estimate = jnp.maximum(estimate, _max_dist(dist_k))
         io = io + io_k
         total_steps = total_steps + iters_k
@@ -64,18 +70,22 @@ def diameter_unisource(
     num_sources: int = 32,
     sweeps: int = 2,
     seed_vertex: int | None = None,
+    backend: str = "scan",
+    chunk_cap: int | None = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
     """Identical sweeps, but each source runs its own full BFS (no sharing)."""
     if seed_vertex is None:
         seed_vertex = int(jnp.argmax(sg.out_degree))
-    dist, io, iters = bfs_uni(sg, seed_vertex)
+    dist, io, iters = bfs_uni(sg, seed_vertex, backend=backend,
+                              chunk_cap=chunk_cap)
     estimate = _max_dist(dist)
     total_steps = iters
     for _ in range(sweeps):
         sources = _farthest(dist, num_sources)
         best = jnp.full(sg.n, -1, jnp.int32)
         for i in range(num_sources):
-            d_i, io_i, it_i = bfs_uni(sg, int(sources[i]))
+            d_i, io_i, it_i = bfs_uni(sg, int(sources[i]), backend=backend,
+                                      chunk_cap=chunk_cap)
             estimate = jnp.maximum(estimate, _max_dist(d_i))
             io = io + io_i
             total_steps = total_steps + it_i

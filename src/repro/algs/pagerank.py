@@ -47,6 +47,7 @@ def pagerank_pull(
     tol: float = 1e-3,
     max_iters: int = 100,
     backend: str = "scan",
+    chunk_cap: int | None = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
     """Pregel/Turi-style PR-pull (the paper's baseline, §4.1).
 
@@ -65,11 +66,13 @@ def pagerank_pull(
     def step(s: PRState) -> tuple[PRState, jnp.ndarray]:
         # (1) active destinations gather x[src]/deg[src] over ALL in-edges.
         x = _out_contrib(sg, s.rank)
-        acc, io = spmv(sg, x, s.active, PLUS_TIMES, direction="in", backend=backend)
+        acc, io = spmv(sg, x, s.active, PLUS_TIMES, direction="in",
+                       backend=backend, chunk_cap=chunk_cap)
         new_rank = jnp.where(s.active, base + damping * acc, s.rank)
         changed = s.active & (jnp.abs(new_rank - s.rank) > thresh)
         # (2) changed vertices multicast activation along their out-edges.
-        woke, io2 = spmv(sg, changed, changed, OR_AND, direction="out", backend=backend)
+        woke, io2 = spmv(sg, changed, changed, OR_AND, direction="out",
+                         backend=backend, chunk_cap=chunk_cap)
         io = (io + io2)._replace(supersteps=io.supersteps + 1)
         done = ~jnp.any(changed)
         return PRState(new_rank, s.rank, woke, s.io + io), done
@@ -93,6 +96,7 @@ def pagerank_push(
     ecap: int | None = None,
     switch_fraction: float = 0.10,
     backend: str = "scan",
+    chunk_cap: int | None = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
     """Graphyti's delta PR-push (§4.1): per superstep, only vertices whose
     rank *changed* beyond the threshold push their delta along out-edges —
@@ -101,6 +105,9 @@ def pagerank_push(
 
     ``backend='blocked'`` routes the dense multicast supersteps through the
     Pallas tile kernel (requires ``device_graph(..., blocked=True)``).
+    ``chunk_cap`` enables the engine's three-way dispatch: mid-density
+    supersteps run the frontier-compacted scan instead of the full
+    multicast, so the shrinking active set pays off in wall-clock.
 
     Same linear iteration as PR-pull (rank_{t+1} = rank_t + c·AᵀD⁻¹·Δ_t),
     hence the same superstep count and fixed point; only the I/O differs.
@@ -121,7 +128,7 @@ def pagerank_push(
         recv, io = hybrid_spmv(
             sg, x, s.active, PLUS_TIMES, direction="out",
             vcap=n, ecap=ecap, switch_fraction=switch_fraction,
-            backend=backend,
+            backend=backend, chunk_cap=chunk_cap,
         )
         rank = s.rank + recv
         # Sub-threshold deltas are RETAINED (not dropped): they accumulate

@@ -7,6 +7,7 @@ from .sem import (
     SemGraph,
     build_store,
     chunk_activity,
+    compact_spmv,
     device_graph,
     p2p_spmv,
     pad_state,
@@ -28,6 +29,7 @@ __all__ = [
     "bsp_run",
     "build_store",
     "chunk_activity",
+    "compact_spmv",
     "device_graph",
     "flat_spmv",
     "hybrid_spmv",

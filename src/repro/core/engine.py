@@ -15,13 +15,23 @@ The engine mirrors FlashGraph's execution model:
 
 Backends
 --------
-The dense-frontier multicast step has two interchangeable executions,
-selected by ``backend=`` on :func:`spmv` / :func:`hybrid_spmv`:
+The multicast step has four interchangeable executions, selected by
+``backend=`` on :func:`spmv` / :func:`hybrid_spmv`:
 
   * ``'scan'`` — :func:`repro.core.sem.sem_spmv`: a ``lax.scan`` over
     fixed-size edge chunks with per-chunk activity tests.  Runs anywhere,
     needs only the chunk stores, and is row-exact in its I/O accounting.
-    This is the portable reference path.
+    This is the portable reference path.  Skips are *counted* but still
+    cost a sequential loop step, so wall-clock is O(total chunks).
+  * ``'compact'`` — :func:`repro.core.sem.compact_spmv`: the frontier-
+    compacted scan.  Active chunk ids are prefix-sum compacted into a
+    dense work-list (``nonzero(size=chunk_cap)``), only those chunks'
+    rows are gathered, and the loop runs ``chunk_cap`` steps — skipped
+    chunks cost ~zero wall-clock, which is what makes the paper's
+    selective I/O claim (P1) a *time* win and not just an IOStats win.
+    Falls back to the full scan (a ``lax.cond``) when the live chunk
+    count overflows ``chunk_cap``; bitwise identical to ``'scan'`` either
+    way, with field-for-field equal IOStats.
   * ``'blocked'`` — :func:`repro.kernels.spmv.blocked_spmv`: the Pallas TPU
     kernel streaming dense (Bd, Bs) edge tiles through the MXU, double-
     buffering each tile's HBM->VMEM DMA behind the previous tile's matmul
@@ -32,23 +42,46 @@ selected by ``backend=`` on :func:`spmv` / :func:`hybrid_spmv`:
     interpret mode elsewhere.  Frontier skipping is *block*-granular, so
     the engine masks x (push) or the output rows (pull/reverse) to keep
     results row-exact and identical to the scan path.
+  * ``'blocked_compact'`` — the same kernel on the frontier-compacted
+    grid: live tiles are permuted to the grid front (scalar-prefetched
+    permutation), tail steps redirect every index map to the already-
+    resident block and ``pl.when`` no-ops them, and a concrete frontier
+    shrinks the grid itself to a power-of-two bucket over the live count.
+    A sparse frontier costs ~``num_active`` real grid steps instead of T.
   * The **point-to-point** path (:func:`repro.core.sem.p2p_spmv`) is
     orthogonal: :func:`hybrid_spmv` switches to it when the frontier is
     sparse regardless of the multicast backend, because row-exact fetches
     beat any page/tile multicast once most blocks are dead.
 
+Three-way dispatch (:func:`hybrid_spmv` with ``chunk_cap``) — the cost
+model, with C total chunks, A live chunks, e live edge mass, S the chunk
+size:
+
+  * dense multicast  — O(C·S) work, best throughput per edge when most
+    chunks are live (A ≈ C): no compaction overhead, contiguous streaming.
+  * compact-scan     — O(C) activity test + O(chunk_cap·S) work.  Wins in
+    the mid-density band where A << C but e is still too large for p2p's
+    static gather. Requires ``chunk_cap``.
+  * point-to-point   — O(ecap) gathered edge slots, row-exact bytes.  Wins
+    on the sparse tail (e <= switch_fraction·m and the static ``vcap`` /
+    ``ecap`` capacities fit), where even one live chunk per live vertex
+    over-fetches.
+
 When each wins: ``scan`` for portability and row-exact I/O counting;
 ``blocked`` for dense/medium frontiers where tile matmuls amortize the
 fetch (PageRank iterations, multi-source BFS/BC lanes — the K lane
-dimension of the kernel IS the §4.3/§4.4 multi-source batch); ``p2p`` for
-the sparse tail of a draining frontier.
+dimension of the kernel IS the §4.3/§4.4 multi-source batch); the compact
+variants whenever the frontier is expected to drain (BFS tails, coreness
+peeling); ``p2p`` for the sparse tail of a draining frontier.
 
-IOStats are reported in the same units by both multicast backends:
+IOStats are reported in the same units by all multicast backends:
 ``requests`` counts active major vertices whose block/chunk was fetched,
 ``records`` the edge-record-equivalent of bytes actually moved (whole
 chunks, or whole dense tiles at 4 bytes/slot), ``chunks_skipped`` the
 elided fetch units (chunks or tiles), and ``messages`` the row-exact count
 of edge contributions from active majors (identical across backends).
+Compacted executions report identical IOStats to their full-grid
+counterparts — compaction changes wall-clock, never accounting.
 """
 from __future__ import annotations
 
@@ -61,6 +94,9 @@ from .sem import (
     EDGE_RECORD_BYTES,
     IOStats,
     SemGraph,
+    _pad_y_init,
+    chunk_activity,
+    compact_spmv,
     p2p_spmv,
     pad_state,
     sem_spmv,
@@ -138,8 +174,13 @@ def blocked_backend_spmv(
     reverse: bool = False,
     y_init: Optional[jnp.ndarray] = None,
     interpret: Optional[bool] = None,
+    compact: bool = False,
 ) -> tuple[jnp.ndarray, IOStats]:
     """Row-exact SpMV through the blocked Pallas kernel + unified IOStats.
+
+    ``compact=True`` streams the frontier-compacted (permuted) grid instead
+    of the full tile grid — same result bitwise, same IOStats, but skipped
+    tiles cost ~zero grid time (see the module docstring).
 
     Tile skipping is block-granular; exactness is restored by masking the
     gather side (push: inactive sources send the additive identity) or the
@@ -192,7 +233,7 @@ def blocked_backend_spmv(
         xv = jnp.where(mask, xv, jnp.asarray(ident, xv.dtype))
 
     y, stats = blocked_spmv(bg, xv, active, active_on=active_on,
-                            interpret=interpret)
+                            interpret=interpret, compact=compact)
 
     if boolean:
         y = y > 0
@@ -244,23 +285,33 @@ def spmv(
     y_init: Optional[jnp.ndarray] = None,
     reverse: bool = False,
     backend: str = "scan",
+    chunk_cap: Optional[int] = None,
 ) -> tuple[jnp.ndarray, IOStats]:
     """Chunked SEM SpMV in the given direction ('out' = push, 'in' = pull).
 
     ``backend`` selects the multicast execution (see module docstring):
-    'scan' streams edge chunks through a lax.scan; 'blocked' streams dense
-    Pallas MXU tiles (requires ``device_graph(..., blocked=True)``).
+    'scan' streams edge chunks through a lax.scan; 'compact' streams only
+    the frontier's chunks through a ``chunk_cap``-length work-list;
+    'blocked' streams dense Pallas MXU tiles (requires
+    ``device_graph(..., blocked=True)``); 'blocked_compact' streams the
+    same tiles on the frontier-compacted grid.  ``chunk_cap`` bounds the
+    compact work-list (defaults to the full chunk count, which is always
+    exact but only pays off when callers size it to the expected frontier).
     """
-    if backend == "blocked":
+    if backend in ("blocked", "blocked_compact"):
         return blocked_backend_spmv(
             sg, x, active, sr, direction=direction, reverse=reverse,
-            y_init=y_init,
+            y_init=y_init, compact=backend == "blocked_compact",
         )
-    if backend != "scan":
+    if backend not in ("scan", "compact"):
         raise ValueError(f"unknown backend {backend!r}")
     store = sg.out_store if direction == "out" else sg.in_store
     if store is None:
         raise ValueError(f"SemGraph has no {direction!r} store")
+    if backend == "compact":
+        cap = store.num_chunks if chunk_cap is None else chunk_cap
+        return compact_spmv(store, x, active, sr, y_init=y_init,
+                            reverse=reverse, chunk_cap=cap)
     return sem_spmv(store, x, active, sr, y_init=y_init, reverse=reverse)
 
 
@@ -276,16 +327,30 @@ def hybrid_spmv(
     switch_fraction: float = 0.10,
     y_init: Optional[jnp.ndarray] = None,
     backend: str = "scan",
+    chunk_cap: Optional[int] = None,
+    compact_fraction: float = 0.5,
 ) -> tuple[jnp.ndarray, IOStats]:
-    """Multicast/point-to-point hybrid (paper §4.2).
+    """Density-driven multicast / compact-scan / point-to-point dispatch.
 
-    The paper switches a vertex to point-to-point messaging once it retains
-    ~10% of its original degree; the SPMD adaptation switches the whole
-    *superstep* when the frontier's edge mass falls below
-    ``switch_fraction`` of m AND the gather fits the static p2p capacities.
-    Early, dense iterations take the multicast path — chunked scan or
-    blocked Pallas tiles per ``backend`` — late, sparse iterations take
-    row-exact fetches: same trade, phrased per-step.
+    The paper (§4.2) switches a vertex to point-to-point messaging once it
+    retains ~10% of its original degree; the SPMD adaptation switches the
+    whole *superstep* by frontier density.  With ``chunk_cap`` set the
+    dispatch is three-way (see the module docstring's cost model):
+
+      * **sparse** — edge mass <= ``switch_fraction``·m and the static
+        ``vcap``/``ecap`` gather capacities fit: row-exact point-to-point
+        fetches (O(ecap), minimal bytes).
+      * **mid** — live chunks fit ``chunk_cap`` AND are at most
+        ``compact_fraction`` of all chunks: the compact scan
+        (O(chunk_cap·S) work — past ``compact_fraction`` the compaction
+        gather costs more than the steps it saves).
+      * **dense** — everything else: full multicast via ``backend``
+        ('scan' chunks or 'blocked'/'blocked_compact' Pallas tiles),
+        O(C·S) but best per-edge throughput.
+
+    ``chunk_cap=None`` (default) preserves the historical two-way
+    multicast/p2p switch.  Every path reports IOStats in identical units,
+    and all paths agree with :func:`flat_spmv` on the result.
     """
     deg = sg.out_degree if direction == "out" else sg.in_degree
     act_edges = jnp.sum(jnp.where(active, deg, 0))
@@ -307,7 +372,30 @@ def hybrid_spmv(
             sg, x, active, sr, direction=direction, vcap=vcap, ecap=ecap, y_init=y_init
         )
 
-    return jax.lax.cond(use_p2p, sparse, dense, None)
+    if chunk_cap is None:
+        return jax.lax.cond(use_p2p, sparse, dense, None)
+
+    store = sg.out_store if direction == "out" else sg.in_store
+    if store is None:
+        raise ValueError(f"SemGraph has no {direction!r} store")
+    cap = max(1, min(int(chunk_cap), store.num_chunks))
+    n_act_chunks = jnp.sum(chunk_activity(store, active).astype(jnp.int32))
+    use_compact = (n_act_chunks <= cap) & (
+        n_act_chunks <= jnp.int32(compact_fraction * store.num_chunks)
+    )
+
+    def compact(_):
+        # use_compact already proved the live chunks fit the cap, so skip
+        # compact_spmv's own overflow cond (it would trace a dead full scan).
+        return compact_spmv(
+            store, x, active, sr, y_init=y_init, chunk_cap=cap,
+            assume_fits=True,
+        )
+
+    def not_sparse(_):
+        return jax.lax.cond(use_compact, compact, dense, None)
+
+    return jax.lax.cond(use_p2p, sparse, not_sparse, None)
 
 
 def flat_spmv(
@@ -331,11 +419,14 @@ def flat_spmv(
     else:
         indptr, indices, w = sg.in_indptr, sg.in_indices, sg.in_w
     deg = indptr[1 : n + 1] - indptr[:n]
-    src = jnp.repeat(jnp.arange(n, dtype=jnp.int32), deg, total_repeat_length=sg.m)
-    dst = indices
-    major, minor = (src, dst) if direction == "out" else (src, dst)
-    # For the 'in' direction the flat arrays are already the in-CSR: rows are
-    # destinations, columns are sources.
+    # The flat arrays are the direction's own CSR, so the expanded row ids
+    # are already the major (frontier) side — src for 'out', dst for 'in' —
+    # and the column ids the minor side; no further swapping is needed.
+    major = jnp.repeat(jnp.arange(n, dtype=jnp.int32), deg, total_repeat_length=sg.m)
+    minor = indices
+    # Push ('out') gathers from the active major (src) and scatters to the
+    # minor (dst); pull ('in') gathers from the minor (src) and scatters
+    # onto the active major (dst).
     gather_idx = minor if direction == "in" else major
     key = major if direction == "in" else minor
     xp = pad_state(x, sr)
@@ -347,10 +438,5 @@ def flat_spmv(
         mask_b = mask
     contrib = jnp.where(mask_b, contrib, jnp.asarray(sr.identity, contrib.dtype))
     keyv = jnp.where(mask, key, n)
-    if y_init is None:
-        y0 = sr.neutral_like(xp, n + 1)
-    else:
-        y0 = jnp.concatenate(
-            [y_init, jnp.full((1,) + y_init.shape[1:], sr.identity, y_init.dtype)], 0
-        )
+    y0 = _pad_y_init(sr, xp, y_init, n)
     return sr.scatter(y0, keyv, contrib)[:n]

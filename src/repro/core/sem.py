@@ -41,6 +41,8 @@ __all__ = [
     "EdgeChunkStore",
     "SemGraph",
     "build_store",
+    "chunk_activity",
+    "compact_spmv",
     "device_graph",
     "pad_state",
     "sem_spmv",
@@ -279,6 +281,42 @@ def chunk_activity(store: EdgeChunkStore, active: jnp.ndarray) -> jnp.ndarray:
     return (prefix[store.hi + 1] - prefix[store.lo]) > 0
 
 
+def _make_fetch(sr, xp, active, n, gather_on_major, has_w):
+    """One chunk's worth of the SEM hot loop: gather, mask, scatter-combine.
+
+    Returns ``fetch(y, major, minor, w, step_valid=None) -> (y, messages)``;
+    ``step_valid`` additionally masks the whole chunk (used by the compact
+    path for work-list slots past the live count).
+    """
+
+    def fetch(y, major, minor, w, step_valid=None):
+        gather_idx = major if gather_on_major else minor
+        key = minor if gather_on_major else major
+        xv = xp[gather_idx]
+        mask = active[jnp.minimum(major, n - 1)] & (major < n)
+        if step_valid is not None:
+            mask = mask & step_valid
+        contrib = sr.edge_op(xv, w if has_w else None)
+        if contrib.ndim > 1:
+            m2 = mask.reshape((-1,) + (1,) * (contrib.ndim - 1))
+        else:
+            m2 = mask
+        contrib = jnp.where(m2, contrib, jnp.asarray(sr.identity, contrib.dtype))
+        key = jnp.where(mask, key, n)  # sentinel bucket for masked lanes
+        y = sr.scatter(y, key, contrib)
+        return y, jnp.sum(mask.astype(jnp.int32))
+
+    return fetch
+
+
+def _pad_y_init(sr, xp, y_init, n):
+    if y_init is None:
+        return sr.neutral_like(xp, n + 1)
+    return jnp.concatenate(
+        [y_init, jnp.full((1,) + y_init.shape[1:], sr.identity, y_init.dtype)], 0
+    )
+
+
 def sem_spmv(
     store: EdgeChunkStore,
     x: jnp.ndarray,
@@ -315,29 +353,10 @@ def sem_spmv(
     n = store.n
     xp = pad_state(x, sr)
     prefix = _active_prefix(active)
-    if y_init is None:
-        y0 = sr.neutral_like(xp, n + 1)
-    else:
-        y0 = jnp.concatenate(
-            [y_init, jnp.full((1,) + y_init.shape[1:], sr.identity, y_init.dtype)], 0
-        )
+    y0 = _pad_y_init(sr, xp, y_init, n)
     gather_on_major = (store.sorted_by == "src") != reverse
     has_w = store.w is not None
-
-    def fetch(y, major, minor, w):
-        gather_idx = major if gather_on_major else minor
-        key = minor if gather_on_major else major
-        xv = xp[gather_idx]
-        mask = active[jnp.minimum(major, n - 1)] & (major < n)
-        contrib = sr.edge_op(xv, w if has_w else None)
-        if contrib.ndim > 1:
-            m2 = mask.reshape((-1,) + (1,) * (contrib.ndim - 1))
-        else:
-            m2 = mask
-        contrib = jnp.where(m2, contrib, jnp.asarray(sr.identity, contrib.dtype))
-        key = jnp.where(mask, key, n)  # sentinel bucket for masked lanes
-        y = sr.scatter(y, key, contrib)
-        return y, jnp.sum(mask.astype(jnp.int32))
+    fetch = _make_fetch(sr, xp, active, n, gather_on_major, has_w)
 
     def body(carry, chunk):
         y, st = carry
@@ -369,6 +388,92 @@ def sem_spmv(
         body, (y0, IOStats.zero()), (store.major, store.minor, w_arr, store.lo, store.hi)
     )
     return y[:n], st
+
+
+def compact_spmv(
+    store: EdgeChunkStore,
+    x: jnp.ndarray,
+    active: jnp.ndarray,
+    sr: Semiring,
+    y_init: Optional[jnp.ndarray] = None,
+    *,
+    chunk_cap: int,
+    reverse: bool = False,
+    assume_fits: bool = False,
+) -> tuple[jnp.ndarray, IOStats]:
+    """Frontier-compacted SpMV: pay for *active* chunks, not all chunks.
+
+    :func:`sem_spmv` is faithful about I/O accounting but still executes a
+    sequential ``lax.scan`` over every chunk — a skipped chunk costs a loop
+    step (and under batching both ``lax.cond`` branches), so skipping shows
+    up in :class:`IOStats` while wall-clock stays O(total chunks).  This
+    path makes skipping pay: the frontier's chunk-activity bitmap is
+    prefix-sum compacted into a dense work-list of active chunk ids
+    (``nonzero(size=chunk_cap)``), only those chunks' ``major``/``minor``/
+    ``w`` rows are gathered (dynamically, one row per step), and the scan
+    runs ``chunk_cap`` steps instead of ``num_chunks``.
+
+    ``chunk_cap`` is a static capacity: when the live chunk count overflows
+    it, a ``lax.cond`` falls back to the full :func:`sem_spmv` scan, so the
+    result is always exact.  Because the compacted work-list preserves chunk
+    order and applies the identical per-chunk fetch, the output is bitwise
+    identical to :func:`sem_spmv` and the IOStats are equal field-for-field
+    (requests / records / chunks_skipped / messages) on both branches.
+
+    ``assume_fits=True`` elides the overflow test and the traced fallback
+    branch entirely — ONLY for callers that already guarantee the live
+    chunk count fits ``chunk_cap`` (the engine's three-way dispatch tests
+    exactly that before routing here); a wrong guarantee silently truncates
+    the work-list.
+    """
+    n = store.n
+    C = store.num_chunks
+    cap = max(1, min(int(chunk_cap), C))
+    xp = pad_state(x, sr)
+    prefix = _active_prefix(active)
+    y0 = _pad_y_init(sr, xp, y_init, n)
+    gather_on_major = (store.sorted_by == "src") != reverse
+    has_w = store.w is not None
+    fetch = _make_fetch(sr, xp, active, n, gather_on_major, has_w)
+
+    per_chunk_act = prefix[store.hi + 1] - prefix[store.lo]
+    act_chunk = per_chunk_act > 0
+    n_act_chunks = jnp.sum(act_chunk.astype(jnp.int32))
+
+    def compact_branch(_):
+        ids = jnp.nonzero(act_chunk, size=cap, fill_value=0)[0].astype(jnp.int32)
+        step_valid = jnp.arange(cap, dtype=jnp.int32) < n_act_chunks
+
+        def body(carry, sl):
+            y, msgs = carry
+            cid, valid = sl
+            major = store.major[cid]
+            minor = store.minor[cid]
+            w = store.w[cid] if has_w else None
+            y, m = fetch(y, major, minor, w, valid)
+            return (y, msgs + m), None
+
+        (y, msgs), _ = jax.lax.scan(body, (y0, jnp.zeros((), jnp.int32)),
+                                    (ids, step_valid))
+        st = IOStats(
+            # requests/records/skips are per-chunk facts independent of the
+            # execution order — computed vectorized over the activity bitmap
+            # so they equal the full scan's running totals exactly.
+            requests=jnp.sum(jnp.where(act_chunk, per_chunk_act, 0)),
+            records=n_act_chunks * store.chunk_size,
+            chunks_skipped=C - n_act_chunks,
+            messages=msgs,
+            supersteps=jnp.zeros((), jnp.int32),
+        )
+        return y[:n], st
+
+    if assume_fits:
+        return compact_branch(None)
+
+    def full_branch(_):
+        return sem_spmv(store, x, active, sr, y_init, reverse=reverse)
+
+    return jax.lax.cond(n_act_chunks <= cap, compact_branch, full_branch, None)
 
 
 def p2p_spmv(
@@ -403,12 +508,7 @@ def p2p_spmv(
         y = sr.neutral_like(pad_state(x, sr), n) if y_init is None else y_init
         return y, IOStats.zero()
     xp = pad_state(x, sr)
-    if y_init is None:
-        y0 = sr.neutral_like(xp, n + 1)
-    else:
-        y0 = jnp.concatenate(
-            [y_init, jnp.full((1,) + y_init.shape[1:], sr.identity, y_init.dtype)], 0
-        )
+    y0 = _pad_y_init(sr, xp, y_init, n)
 
     act_idx = jnp.nonzero(active, size=vcap, fill_value=n)[0]
     num_act = jnp.minimum(jnp.sum(active.astype(jnp.int32)), vcap)

@@ -2,6 +2,8 @@ from .ops import (
     BlockedGraph,
     blocked_spmv,
     build_blocked,
+    compact_grid_size,
+    compact_tile_order,
     default_interpret,
     tile_activity,
 )
@@ -12,6 +14,8 @@ __all__ = [
     "blocked_spmv",
     "build_blocked",
     "blocked_spmv_ref",
+    "compact_grid_size",
+    "compact_tile_order",
     "default_interpret",
     "tile_activity",
 ]

@@ -32,6 +32,24 @@ Grid: 1-D over edge tiles.  Scalar-prefetch operands:
   first[T] 1 where a tile starts a new destination block
   last[T]  1 where a tile ends its destination block
   act[T]   1 where the frontier intersects the tile's source block
+
+Two grid layouts share the kernel bodies:
+
+  * :func:`spmv_pallas` — the full grid: every tile gets a step; inactive
+    steps elide the x DMA (index-map redirect) and the matmul (``pl.when``)
+    but still cost a grid step, so a sparse frontier's wall-clock stays
+    O(T).
+  * :func:`spmv_pallas_compact` — the frontier-compacted grid: active
+    tiles are permuted to the grid's front (``perm``, stable, so tiles of
+    one destination block stay contiguous), ``first``/``last`` are
+    recomputed over the permuted order, and every step past the live count
+    (``t >= nact``) redirects all three index maps at the last active tile
+    — the tile, x block, and output block are already resident, so tail
+    steps issue no DMA and no compute, making a sparse frontier cost
+    ~``nact`` real steps.  Callers with a concrete frontier shrink the grid
+    itself to the next power of two over ``nact`` (see
+    ``ops.blocked_spmv(compact=True)``), so the tail is at most ``nact``
+    no-op steps.
 """
 from __future__ import annotations
 
@@ -44,7 +62,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from ..pallas_compat import tpu_compiler_params
 
-__all__ = ["spmv_pallas"]
+__all__ = ["spmv_pallas", "spmv_pallas_compact"]
 
 _NEG = -3.0e38
 
@@ -145,3 +163,111 @@ def spmv_pallas(
         ),
         interpret=interpret,
     )(dbid, sbid, first, last, act, tiles, x_blocks)
+
+
+def _kernel_plus_times_compact(
+    perm, dbid, sbid, first, last, nact, tiles_ref, x_ref, y_ref, acc_ref
+):
+    t = pl.program_id(0)
+
+    @pl.when(first[t] == 1)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Every step below the live count is an active tile (that is the whole
+    # point of the permutation); tail steps have first == last == 0 and
+    # resident-redirected index maps, so they do nothing at all.
+    @pl.when(t < nact[0])
+    def _accum():
+        acc_ref[...] += jnp.dot(
+            tiles_ref[0], x_ref[0], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(last[t] == 1)
+    def _flush():
+        y_ref[0] = acc_ref[...].astype(y_ref.dtype)
+
+
+def _kernel_min_plus_compact(
+    perm, dbid, sbid, first, last, nact, tiles_ref, x_ref, y_ref, acc_ref
+):
+    t = pl.program_id(0)
+
+    @pl.when(first[t] == 1)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, jnp.inf)
+
+    @pl.when(t < nact[0])
+    def _accum():
+        w = tiles_ref[0]
+        x = x_ref[0]
+        cand = jnp.min(w[:, :, None] + x[None, :, :], axis=1)
+        acc_ref[...] = jnp.minimum(acc_ref[...], cand)
+
+    @pl.when(last[t] == 1)
+    def _flush():
+        y_ref[0] = acc_ref[...].astype(y_ref.dtype)
+
+
+def spmv_pallas_compact(
+    tiles: jnp.ndarray,  # [T, Bd, Bs] dense edge tiles
+    perm: jnp.ndarray,  # [G] int32 tile id per grid step (active-compacted)
+    dbid: jnp.ndarray,  # [G] int32 dst block per step (permuted order)
+    sbid: jnp.ndarray,  # [G] int32 src block per step (permuted order)
+    first: jnp.ndarray,  # [G] int32 0/1 — step starts a dst block (live only)
+    last: jnp.ndarray,  # [G] int32 0/1 — step ends a dst block (live only)
+    nact: jnp.ndarray,  # [1] int32 — number of live steps
+    x_blocks: jnp.ndarray,  # [nSB, Bs, K] vertex state
+    n_dst_blocks: int,
+    *,
+    semiring: str = "plus_times",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns y_blocks [n_dst_blocks, Bd, K] (f32), compacted grid.
+
+    The grid length is ``G = len(perm)`` — the caller's (possibly
+    size-bucketed) work-list capacity, not the tile count.  Steps
+    ``t >= nact[0]`` carry the last live step's tile/x/out coordinates, so
+    no DMA is issued and ``pl.when`` skips all compute: a skipped tile costs
+    one empty grid step.  Destination blocks none of whose tiles are live
+    are never flushed; the caller fills their rows with the semiring
+    identity (see ``ops.blocked_spmv``).
+    """
+    T, Bd, Bs = tiles.shape
+    nSB, _, K = x_blocks.shape
+    kernel = (
+        _kernel_min_plus_compact
+        if semiring == "min_plus"
+        else _kernel_plus_times_compact
+    )
+    G = int(perm.shape[0])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(G,),
+        in_specs=[
+            pl.BlockSpec(
+                (1, Bd, Bs),
+                lambda t, perm, dbid, sbid, first, last, nact: (perm[t], 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, Bs, K),
+                lambda t, perm, dbid, sbid, first, last, nact: (sbid[t], 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, Bd, K),
+            lambda t, perm, dbid, sbid, first, last, nact: (dbid[t], 0, 0),
+        ),
+        scratch_shapes=[pltpu.VMEM((Bd, K), jnp.float32)],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_dst_blocks, Bd, K), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(perm, dbid, sbid, first, last, nact, tiles, x_blocks)

@@ -31,12 +31,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...graph.csr import Graph
-from .kernel import spmv_pallas
+from .kernel import spmv_pallas, spmv_pallas_compact
 
 __all__ = [
     "BlockedGraph",
     "build_blocked",
     "blocked_spmv",
+    "compact_grid_size",
+    "compact_tile_order",
     "default_interpret",
     "tile_activity",
 ]
@@ -165,6 +167,69 @@ def build_blocked(
     )
 
 
+def compact_tile_order(bg: BlockedGraph, act_tile: jnp.ndarray):
+    """Compact live tiles to the grid front; returns the permuted schedule.
+
+    ``act_tile`` (int/bool[T]) is stably compacted — ``nonzero`` yields
+    ascending tile ids, so tiles of one destination block stay contiguous
+    and their accumulation order (hence float rounding) is unchanged.
+    Tail slots (``pos >= nact``) repeat the LAST live tile's coordinates:
+    the tile, its x block, and its output block are all still resident from
+    the previous step, so the tail issues no DMA.  ``first``/``last`` are
+    recomputed over the permuted order and forced to 0 on the tail so the
+    accumulator is neither re-zeroed nor re-flushed.
+
+    Returns ``(perm, dbid, sbid, first, last, nact)`` — all int32[T] plus
+    the scalar live count.
+    """
+    T = bg.num_tiles
+    act = act_tile.astype(jnp.int32)
+    nact = jnp.sum(act)
+    ids = jnp.nonzero(act > 0, size=T, fill_value=0)[0].astype(jnp.int32)
+    last_live = ids[jnp.maximum(nact - 1, 0)]
+    pos = jnp.arange(T, dtype=jnp.int32)
+    valid = pos < nact
+    perm = jnp.where(valid, ids, last_live)
+    dbid = bg.dbid[perm]
+    sbid = bg.sbid[perm]
+    prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), dbid[:-1]])
+    nxt = jnp.concatenate([dbid[1:], jnp.full((1,), -1, jnp.int32)])
+    first = (valid & (dbid != prev)).astype(jnp.int32)
+    # the last live step must flush even though the tail repeats its dbid.
+    last = (valid & ((dbid != nxt) | (pos == nact - 1))).astype(jnp.int32)
+    return perm, dbid, sbid, first, last, nact
+
+
+def compact_grid_size(num_tiles: int, num_active: int) -> int:
+    """Smallest power-of-two grid covering ``num_active``, capped at T.
+
+    Only log2(T) distinct sizes exist, so pre-jitting one kernel per bucket
+    is cheap while a tiny frontier gets a tiny grid.
+    """
+    g = 1
+    while g < max(1, num_active):
+        g *= 2
+    return min(g, max(1, num_tiles))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _compact_spmv_jit(bg: BlockedGraph, x_blocks, perm, dbid, sbid, first,
+                      last, nact, interpret: bool):
+    return spmv_pallas_compact(
+        bg.tiles,
+        perm,
+        dbid,
+        sbid,
+        first,
+        last,
+        nact,
+        x_blocks,
+        bg.n_dst_blocks,
+        semiring=bg.semiring,
+        interpret=interpret,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def _blocked_spmv_jit(bg: BlockedGraph, x_blocks, act_tile, interpret: bool):
     return spmv_pallas(
@@ -213,6 +278,7 @@ def blocked_spmv(
     *,
     active_on: str = "src",
     interpret: bool = True,
+    compact: bool = False,
 ) -> tuple[jnp.ndarray, dict]:
     """y = A (.) x over the blocked tiles, with frontier tile skipping.
 
@@ -225,12 +291,21 @@ def blocked_spmv(
         granular: an active block applies whole tiles, so callers needing
         row/column-exact semantics mask ``x`` (or the output rows)
         themselves — :func:`repro.core.engine.spmv` does exactly that.
+      compact: route through the frontier-compacted grid
+        (:func:`repro.kernels.spmv.kernel.spmv_pallas_compact`): live tiles
+        are permuted to the grid front and the tail no-ops on resident
+        blocks, so a sparse frontier costs ~``num_active`` real steps.
+        When ``active`` is concrete (outside jit) the grid itself shrinks
+        to the next power of two over the live count — size-bucketed so at
+        most log2(T) kernel variants ever compile.  Results are bitwise
+        identical to the full grid (same tiles, same order).
 
     Returns:
       (y [n] or [n, K] f32, stats) — stats counts fetched/skipped tiles,
       tile bytes moved, and the edge records resident in fetched tiles
       (``messages`` — block-granular, so >= the row-exact count), the
-      kernel-path analogue of ``core.sem.IOStats``.
+      kernel-path analogue of ``core.sem.IOStats``.  Identical across the
+      full and compacted grids.
     """
     squeeze = x.ndim == 1
     if squeeze:
@@ -247,14 +322,35 @@ def blocked_spmv(
     else:
         act_tile = tile_activity(bg, active, active_on)
 
-    y_blocks = _blocked_spmv_jit(bg, x_blocks, act_tile, interpret)
-    # The grid walks only existing tiles, so a destination block owning NO
-    # tiles is never flushed and its output rows stay uninitialized (NaN in
-    # interpret mode, garbage on TPU).  Fill them with the accumulate
-    # identity, matching what an all-absent tile would have flushed.
     ident_out = jnp.inf if bg.semiring == "min_plus" else 0.0
-    has_db = jnp.zeros(bg.n_dst_blocks, bool).at[bg.dbid].set(True)
-    y_blocks = jnp.where(has_db[:, None, None], y_blocks, ident_out)
+    if compact:
+        perm, dbid_p, sbid_p, first_p, last_p, nact = compact_tile_order(
+            bg, act_tile
+        )
+        if isinstance(nact, jax.core.Tracer):
+            G = bg.num_tiles  # traced frontier: full-capacity grid, tail no-ops
+        else:
+            G = compact_grid_size(bg.num_tiles, int(nact))
+        y_blocks = _compact_spmv_jit(
+            bg, x_blocks, perm[:G], dbid_p[:G], sbid_p[:G], first_p[:G],
+            last_p[:G], jnp.reshape(nact, (1,)), interpret,
+        )
+        # Blocks with no LIVE tile are never flushed (the compacted grid
+        # never visits them) — fill with the accumulate identity, exactly
+        # what the full grid's zeroed-then-flushed accumulator yields.
+        flushed = (
+            jnp.zeros(bg.n_dst_blocks, jnp.int32).at[bg.dbid].max(act_tile) > 0
+        )
+        y_blocks = jnp.where(flushed[:, None, None], y_blocks, ident_out)
+    else:
+        y_blocks = _blocked_spmv_jit(bg, x_blocks, act_tile, interpret)
+        # The grid walks only existing tiles, so a destination block owning
+        # NO tiles is never flushed and its output rows stay uninitialized
+        # (NaN in interpret mode, garbage on TPU).  Fill them with the
+        # accumulate identity, matching what an all-absent tile would have
+        # flushed.
+        has_db = jnp.zeros(bg.n_dst_blocks, bool).at[bg.dbid].set(True)
+        y_blocks = jnp.where(has_db[:, None, None], y_blocks, ident_out)
     y = y_blocks.reshape(bg.n_dst_blocks * bd, k)[:n]
     if squeeze:
         y = y[:, 0]

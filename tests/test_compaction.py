@@ -1,0 +1,273 @@
+"""Frontier compaction invariants: compaction changes WALL-CLOCK, never
+answers and never accounting.
+
+Three layers are pinned down:
+
+  * ``compact_spmv`` (chunk work-list) must be *bitwise* identical to
+    ``sem_spmv`` — same chunks, same order, same per-chunk math — across
+    semirings, densities, reverse flows, and the overflow fallback, with
+    field-for-field equal IOStats.
+  * ``blocked_spmv(compact=True)`` (permuted Pallas grid) must be bitwise
+    identical to the full tile grid — the stable permutation preserves
+    per-block accumulation order — with identical tile stats, both under
+    jit (full-capacity grid, tail no-ops) and eagerly (power-of-two
+    bucketed grid).
+  * ``hybrid_spmv`` with ``chunk_cap`` (the three-way dispatch) must agree
+    with ``flat_spmv`` on every side of every switching boundary: exactly
+    at/above/below ``switch_fraction``, vcap/ecap overflow (falls back to
+    multicast), and compact-overflow (falls back to the full scan).
+    Frontier values are integer-valued floats so float32 sums are exact
+    and "agree" means bitwise.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    MIN_PLUS,
+    OR_AND,
+    PLUS_TIMES,
+    compact_spmv,
+    device_graph,
+    flat_spmv,
+    hybrid_spmv,
+    sem_spmv,
+    spmv,
+)
+from repro.core.sem import chunk_activity
+from repro.graph.generators import erdos_renyi, rmat
+
+pytestmark = pytest.mark.kernel
+
+
+@pytest.fixture(scope="module")
+def sg():
+    g = erdos_renyi(200, 1500, seed=1)
+    return device_graph(g, chunk_size=64, blocked=True, bd=32, bs=32)
+
+
+def _stats_equal(a, b):
+    return all(int(x) == int(y) for x, y in zip(a, b))
+
+
+def _frontier(n, density):
+    # contiguous prefix: active chunk count tracks density (see bench)
+    return jnp.asarray(np.arange(n) < max(0, int(round(density * n))))
+
+
+# ----------------------------------------------------- compact chunk scan
+@pytest.mark.parametrize("density", [1.0, 0.5, 0.1, 0.01, 0.0])
+@pytest.mark.parametrize("sr_name", ["plus_times", "min_plus", "or_and"])
+def test_compact_scan_bitwise_parity(sg, density, sr_name):
+    sr = {"plus_times": PLUS_TIMES, "min_plus": MIN_PLUS, "or_and": OR_AND}[
+        sr_name
+    ]
+    rng = np.random.default_rng(3)
+    if sr_name == "or_and":
+        x = jnp.asarray(rng.random((sg.n, 3)) < 0.3)
+    else:
+        x = jnp.asarray(rng.integers(0, 64, sg.n).astype(np.float32))
+    act = _frontier(sg.n, density)
+    y_s, st_s = sem_spmv(sg.out_store, x, act, sr)
+    y_c, st_c = compact_spmv(sg.out_store, x, act, sr, chunk_cap=8)
+    assert bool(jnp.all(y_s == y_c))
+    assert _stats_equal(st_s, st_c)
+
+
+@pytest.mark.parametrize("reverse", [False, True])
+def test_compact_scan_reverse_and_pull(sg, reverse):
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.integers(0, 64, sg.n).astype(np.float32))
+    act = _frontier(sg.n, 0.2)
+    y_s, st_s = sem_spmv(sg.out_store, x, act, PLUS_TIMES, reverse=reverse)
+    y_c, st_c = compact_spmv(
+        sg.out_store, x, act, PLUS_TIMES, chunk_cap=16, reverse=reverse
+    )
+    assert bool(jnp.all(y_s == y_c))
+    assert _stats_equal(st_s, st_c)
+    # pull store too
+    y_s, st_s = sem_spmv(sg.in_store, x, act, PLUS_TIMES)
+    y_c, st_c = compact_spmv(sg.in_store, x, act, PLUS_TIMES, chunk_cap=16)
+    assert bool(jnp.all(y_s == y_c))
+    assert _stats_equal(st_s, st_c)
+
+
+def test_compact_scan_overflow_falls_back_to_full(sg):
+    """Live chunks > chunk_cap: the lax.cond must take the full scan and
+    still report identical IOStats."""
+    act = jnp.ones(sg.n, bool)
+    n_live = int(jnp.sum(chunk_activity(sg.out_store, act).astype(jnp.int32)))
+    assert n_live > 2  # the cap below really overflows
+    x = jnp.asarray(np.arange(sg.n, dtype=np.float32))
+    y_s, st_s = sem_spmv(sg.out_store, x, act, PLUS_TIMES)
+    y_c, st_c = compact_spmv(sg.out_store, x, act, PLUS_TIMES, chunk_cap=2)
+    assert bool(jnp.all(y_s == y_c))
+    assert _stats_equal(st_s, st_c)
+
+
+def test_compact_scan_with_y_init_under_jit(sg):
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.integers(0, 32, sg.n).astype(np.float32))
+    y0 = jnp.asarray(rng.integers(0, 32, sg.n).astype(np.float32))
+    act = _frontier(sg.n, 0.15)
+    f = jax.jit(
+        lambda x, a, y0: compact_spmv(
+            sg.out_store, x, a, PLUS_TIMES, y_init=y0, chunk_cap=16
+        )
+    )
+    y_c, _ = f(x, act, y0)
+    y_s, _ = sem_spmv(sg.out_store, x, act, PLUS_TIMES, y_init=y0)
+    assert bool(jnp.all(y_s == y_c))
+
+
+# ----------------------------------------------- permuted (compacted) grid
+@pytest.mark.parametrize("density", [1.0, 0.15, 0.0])
+@pytest.mark.parametrize("semiring", ["plus_times", "min_plus", "bool"])
+def test_permuted_kernel_bitwise_parity(density, semiring):
+    from repro.kernels.spmv import blocked_spmv, build_blocked
+
+    g = erdos_renyi(200, 1500, seed=1)
+    bg = build_blocked(g, bd=32, bs=32, semiring=semiring)
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.integers(0, 50, (g.n, 3)).astype(np.float32))
+    act = _frontier(g.n, density)
+    y_f, st_f = blocked_spmv(bg, x, act, interpret=True)
+    y_c, st_c = blocked_spmv(bg, x, act, interpret=True, compact=True)
+    assert bool(jnp.all((y_f == y_c) | (jnp.isinf(y_f) & jnp.isinf(y_c))))
+    assert all(int(st_f[k]) == int(st_c[k]) for k in st_f)
+
+
+def test_permuted_kernel_traced_and_bucketed_grids():
+    """The same frontier must give the same answer on the jit path (grid =
+    all tiles, tail no-ops) and the eager path (power-of-two grid)."""
+    from repro.kernels.spmv import blocked_spmv, build_blocked, compact_grid_size
+
+    g = erdos_renyi(256, 2000, seed=2)
+    bg = build_blocked(g, bd=32, bs=32)
+    x = jnp.asarray(np.arange(256, dtype=np.float32))
+    act = _frontier(256, 0.1)
+    y_eager, _ = blocked_spmv(bg, x, act, interpret=True, compact=True)
+    f = jax.jit(lambda x, a: blocked_spmv(bg, x, a, interpret=True,
+                                          compact=True))
+    y_jit, _ = f(x, act)
+    y_full, _ = blocked_spmv(bg, x, act, interpret=True)
+    assert bool(jnp.all(y_eager == y_full))
+    assert bool(jnp.all(y_jit == y_full))
+    # bucket sizes: powers of two, clipped to the tile count
+    assert [compact_grid_size(20, k) for k in (0, 1, 5, 16, 40)] == [
+        1, 1, 8, 16, 20,
+    ]
+
+
+def test_permuted_kernel_via_engine_backend(sg):
+    """backend='blocked_compact' threads through the engine's row-exact
+    masking and reports IOStats identical to backend='blocked'."""
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.integers(0, 40, sg.n).astype(np.float32))
+    act = _frontier(sg.n, 0.2)
+    y_b, st_b = spmv(sg, x, act, PLUS_TIMES, backend="blocked")
+    y_c, st_c = spmv(sg, x, act, PLUS_TIMES, backend="blocked_compact")
+    assert bool(jnp.all(y_b == y_c))
+    assert _stats_equal(st_b, st_c)
+
+
+# ------------------------------------------------- hybrid switch boundaries
+@pytest.fixture(scope="module")
+def sgr():
+    g = rmat(8, edge_factor=8, seed=4)  # n=256, skewed degrees
+    return device_graph(g, chunk_size=64)
+
+
+def _edge_prefix_frontier(sg, edge_budget):
+    """Largest vertex prefix whose edge mass is <= edge_budget, as a bool
+    frontier (contiguous, so chunk activity tracks it)."""
+    deg = np.asarray(sg.out_degree)
+    cum = np.cumsum(deg)
+    k = int(np.searchsorted(cum, edge_budget, side="right"))
+    return jnp.asarray(np.arange(sg.n) < k), (int(cum[k - 1]) if k else 0)
+
+
+def _hybrid_vs_flat(sg, active, **kw):
+    x = jnp.asarray(np.arange(sg.n, dtype=np.float32) % 31)
+    y_h, st = hybrid_spmv(sg, x, active, PLUS_TIMES, direction="out", **kw)
+    y_f = flat_spmv(sg, x, active, PLUS_TIMES, direction="out")
+    assert bool(jnp.all(y_h == y_f)), "hybrid diverged from flat baseline"
+    return st
+
+
+def test_hybrid_at_and_around_switch_fraction(sgr):
+    """Frontiers with edge mass exactly at, just below, and just above
+    switch_fraction*m: p2p takes <=, multicast takes >."""
+    m = sgr.m
+    act_at, mass = _edge_prefix_frontier(sgr, int(0.10 * m))
+    frac = mass / m  # exact switch point for THIS frontier's mass
+    common = dict(vcap=sgr.n, ecap=m, chunk_cap=8)
+    # exactly at the switch: act_edges <= switch_fraction*m -> p2p
+    st = _hybrid_vs_flat(sgr, act_at, switch_fraction=frac, **common)
+    assert int(st.chunks_skipped) == 0  # p2p path: no chunk accounting
+    assert int(st.records) == mass  # row-exact bytes
+    # just below the mass: multicast (chunked) accounting appears
+    st = _hybrid_vs_flat(
+        sgr, act_at, switch_fraction=(mass - 1) / m, **common
+    )
+    assert int(st.records) % sgr.out_store.chunk_size == 0
+    # comfortably above: p2p again
+    st = _hybrid_vs_flat(sgr, act_at, switch_fraction=2 * frac, **common)
+    assert int(st.records) == mass
+
+
+def test_hybrid_vcap_ecap_overflow_falls_back_to_multicast(sgr):
+    act, mass = _edge_prefix_frontier(sgr, int(0.05 * sgr.m))
+    n_act = int(jnp.sum(act.astype(jnp.int32)))
+    assert n_act > 1 and mass > 2
+    # vcap too small for the active set -> multicast despite sparse mass
+    st = _hybrid_vs_flat(sgr, act, vcap=n_act - 1, ecap=sgr.m, chunk_cap=8)
+    assert int(st.records) % sgr.out_store.chunk_size == 0
+    # ecap too small for the edge mass -> multicast despite sparse mass
+    st = _hybrid_vs_flat(sgr, act, vcap=sgr.n, ecap=mass - 1, chunk_cap=8)
+    assert int(st.records) % sgr.out_store.chunk_size == 0
+
+
+def test_hybrid_compact_overflow_falls_back_to_full_scan(sgr):
+    """Mid-density frontier whose live chunks overflow chunk_cap: dispatch
+    must take the dense multicast, still flat-exact, with scan-identical
+    stats."""
+    act = _frontier(sgr.n, 0.5)
+    n_live = int(
+        jnp.sum(chunk_activity(sgr.out_store, act).astype(jnp.int32))
+    )
+    assert n_live > 1
+    st = _hybrid_vs_flat(
+        sgr, act, vcap=4, ecap=8, chunk_cap=n_live - 1
+    )
+    x = jnp.asarray(np.arange(sgr.n, dtype=np.float32) % 31)
+    _, st_scan = sem_spmv(sgr.out_store, x, act, PLUS_TIMES)
+    assert _stats_equal(st, st_scan)
+
+
+def test_hybrid_mid_density_takes_compact_with_identical_stats(sgr):
+    """In the compact band the dispatch result must carry the SAME IOStats
+    as the full scan (compaction is invisible to accounting)."""
+    act = _frontier(sgr.n, 0.1)
+    n_live = int(
+        jnp.sum(chunk_activity(sgr.out_store, act).astype(jnp.int32))
+    )
+    st = _hybrid_vs_flat(
+        sgr, act, vcap=1, ecap=1, chunk_cap=max(n_live, 1),
+        switch_fraction=0.0,  # p2p unreachable: mid band must handle it
+    )
+    x = jnp.asarray(np.arange(sgr.n, dtype=np.float32) % 31)
+    _, st_scan = sem_spmv(sgr.out_store, x, act, PLUS_TIMES)
+    assert _stats_equal(st, st_scan)
+    assert int(st.chunks_skipped) == sgr.out_store.num_chunks - n_live
+
+
+def test_hybrid_chunk_cap_none_preserves_two_way_switch(sgr):
+    """Back-compat: without chunk_cap the historical two-way dispatch."""
+    act = _frontier(sgr.n, 0.01)
+    st = _hybrid_vs_flat(sgr, act, vcap=sgr.n, ecap=sgr.m)
+    assert int(st.chunks_skipped) == 0  # sparse -> p2p
+    act = jnp.ones(sgr.n, bool)
+    st = _hybrid_vs_flat(sgr, act, vcap=sgr.n, ecap=sgr.m)
+    assert int(st.records) % sgr.out_store.chunk_size == 0  # dense -> scan
