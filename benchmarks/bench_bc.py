@@ -13,7 +13,6 @@ import jax
 import numpy as np
 
 from repro.algs import bc_fused, bc_multisource, bc_unisource
-from repro.core import EDGE_RECORD_BYTES
 
 from .common import bench_graph, row, sem_graph, timeit
 
@@ -50,7 +49,7 @@ def run(quick: bool = True) -> list:
         rows += [
             row("bc", name, "runtime_s", t),
             row("bc", name, "supersteps", int(st)),
-            row("bc", name, "read_MB", int(io.records) * EDGE_RECORD_BYTES / 1e6),
+            row("bc", name, "read_MB", io.bytes() / 1e6),
             row("bc", name, "io_requests", int(io.requests)),
         ]
     rows += [

@@ -11,7 +11,6 @@ import jax
 import numpy as np
 
 from repro.algs import coreness
-from repro.core import EDGE_RECORD_BYTES
 
 from .common import bench_graph, row, sem_graph, timeit
 
@@ -34,8 +33,7 @@ def _sweep(sg, tag, rows, max_supersteps=None):
         rows += [
             row("coreness", f"{tag}/{name}", "runtime_s", t),
             row("coreness", f"{tag}/{name}", "supersteps", int(iters)),
-            row("coreness", f"{tag}/{name}", "read_MB",
-                int(io.records) * EDGE_RECORD_BYTES / 1e6),
+            row("coreness", f"{tag}/{name}", "read_MB", io.bytes() / 1e6),
             row("coreness", f"{tag}/{name}", "io_requests", int(io.requests)),
             row("coreness", f"{tag}/{name}", "messages", int(io.messages)),
         ]

@@ -10,7 +10,6 @@ from __future__ import annotations
 import jax
 
 from repro.algs import diameter_multisource, diameter_unisource
-from repro.core import EDGE_RECORD_BYTES
 
 from .common import bench_graph, row, sem_graph, timeit
 
@@ -37,7 +36,7 @@ def run(quick: bool = True) -> list:
         rows += [
             row("diameter", name, "runtime_s", t),
             row("diameter", name, "supersteps", int(steps)),
-            row("diameter", name, "read_MB", int(io.records) * EDGE_RECORD_BYTES / 1e6),
+            row("diameter", name, "read_MB", io.bytes() / 1e6),
             row("diameter", name, "io_requests", int(io.requests)),
             row("diameter", name, "estimate", int(est)),
         ]

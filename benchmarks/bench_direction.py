@@ -1,0 +1,100 @@
+"""Direction-optimizing BFS sweep: static push vs static pull vs adaptive.
+
+Two workloads bracket the regime space:
+
+  * **RMAT** (low diameter, Twitter-like skew): the frontier balloons
+    within ~2 hops, so the middle supersteps carry almost the whole edge
+    mass — exactly where executing the frontier's multicast as a *pull*
+    over the (tiny) unexplored side, which also fits the row-exact p2p
+    gather, beats pushing.  The Beamer α gate triggers here.
+  * **path graph** (diameter = n-1): the frontier is 1–2 vertices for the
+    entire run, so static pull — streaming the huge unexplored side's
+    in-chunks every superstep — is pathological.  The β gate must keep
+    the adaptive mode pinned to push.
+
+Adaptive must sit at or below the better static mode on BOTH graphs —
+that is the whole point of a per-superstep switch — while levels and the
+logical ``messages`` count stay identical across all three modes
+(direction changes wall-clock and bytes, never answers).  Per-mode
+``bytes_moved`` rows feed the BENCH_PR*.json byte trajectory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.algs import bfs_uni
+from repro.core import ExecutionPolicy, device_graph
+from repro.graph.generators import path_graph
+
+from .common import bench_graph, row, timeit
+
+MODES = ("push", "pull", "adaptive")
+_DIR = {"push": "out", "pull": "in", "adaptive": "auto"}
+
+
+def sweep(graphs, *, repeats: int = 5, switch_fraction: float = 0.10,
+          label: str = "direction"):
+    """Time BFS under each direction mode; returns (rows, ratios).
+
+    ``graphs`` is a list of (name, SemGraph, source).  ``ratios`` maps
+    graph name -> (adaptive_runtime / best_static_runtime, modes_agree)
+    where ``modes_agree`` is 1.0 iff levels AND messages are identical
+    across all three modes.
+    """
+    rows, ratios = [], {}
+    for gname, sg, src in graphs:
+        C = sg.out_store.num_chunks
+        times, levels, msgs = {}, {}, {}
+        for mode in MODES:
+            # p2p capacities sized to the sparse band it serves — its cost
+            # is O(vcap + ecap) per superstep, so full-graph caps would
+            # charge every sparse superstep the dense price, while caps
+            # too small keep the tail (and the pull side's tiny unexplored
+            # set) off the row-exact path entirely.
+            pol = ExecutionPolicy(
+                direction=_DIR[mode], backend="compact", chunk_cap=C,
+                adaptive_cap=True, switch_fraction=switch_fraction,
+                vcap=max(64, sg.n // 4), ecap=max(256, int(sg.m) // 10),
+            )
+            fn = jax.jit(lambda p=pol: bfs_uni(sg, src, policy=p))
+            (d, io, it), t = timeit(fn, repeats=repeats)
+            times[mode] = t
+            levels[mode] = np.asarray(d)
+            msgs[mode] = int(io.messages)
+            rows += [
+                row(label, f"{gname}_{mode}", "runtime_s", t),
+                row(label, f"{gname}_{mode}", "read_MB", io.bytes() / 1e6),
+                row(label, f"{gname}_{mode}", "supersteps", int(it)),
+            ]
+        best = min(times["push"], times["pull"])
+        ratio = times["adaptive"] / best
+        agree = float(
+            (levels["adaptive"] == levels["push"]).all()
+            and (levels["pull"] == levels["push"]).all()
+            and msgs["adaptive"] == msgs["push"] == msgs["pull"]
+        )
+        rows += [
+            row(label, f"{gname}_adaptive", "vs_best_static_x", ratio),
+            row(label, f"{gname}_adaptive", "vs_push_x",
+                times["adaptive"] / times["push"]),
+            row(label, gname, "modes_agree", agree),
+        ]
+        ratios[gname] = (ratio, agree)
+    return rows, ratios
+
+
+def graphs_for(scale: int, path_n: int):
+    g_rmat = bench_graph(scale=scale, edge_factor=16, symmetrize=True)
+    sg_rmat = device_graph(g_rmat, chunk_size=128)
+    src_rmat = int(jnp.argmax(sg_rmat.out_degree))
+    g_path = path_graph(path_n)
+    sg_path = device_graph(g_path, chunk_size=64)
+    return [("rmat", sg_rmat, src_rmat), ("path", sg_path, 0)]
+
+
+def run(quick: bool = True):
+    graphs = graphs_for(10 if quick else 12, 2048 if quick else 8192)
+    rows, _ = sweep(graphs, repeats=5 if quick else 10)
+    return rows

@@ -11,7 +11,6 @@ import jax
 import numpy as np
 
 from repro.algs import pagerank_inmem, pagerank_pull, pagerank_push
-from repro.core import EDGE_RECORD_BYTES
 
 from .common import bench_graph, row, sem_graph, timeit
 
@@ -28,7 +27,7 @@ def _io_time(io) -> float:
     has no SSD in the loop, so wall-clock here measures compute, not the
     I/O the paper's Fig. 2 runtime is dominated by; this model restores the
     paper's regime from the *measured* I/O counters."""
-    return int(io.records) * EDGE_RECORD_BYTES / SSD_BW + int(io.requests) * SSD_REQ
+    return io.bytes() / SSD_BW + int(io.requests) * SSD_REQ
 
 
 def run(quick: bool = True) -> list:
@@ -54,7 +53,7 @@ def run(quick: bool = True) -> list:
         rows += [
             row("pagerank", name, "runtime_s", t),
             row("pagerank", name, "io_time_model_s", _io_time(io)),
-            row("pagerank", name, "read_MB", int(io.records) * EDGE_RECORD_BYTES / 1e6),
+            row("pagerank", name, "read_MB", io.bytes() / 1e6),
             row("pagerank", name, "io_requests", int(io.requests)),
             row("pagerank", name, "messages", int(io.messages)),
             row("pagerank", name, "supersteps", int(iters)),
@@ -92,8 +91,7 @@ def _backend_sweep(quick: bool) -> list:
         rows += [
             row("pagerank", f"push_{backend}", "runtime_s", t),
             row("pagerank", f"push_{backend}", "supersteps", int(it)),
-            row("pagerank", f"push_{backend}", "read_MB",
-                int(io.records) * EDGE_RECORD_BYTES / 1e6),
+            row("pagerank", f"push_{backend}", "read_MB", io.bytes() / 1e6),
             row("pagerank", f"push_{backend}", "fetches_skipped",
                 int(io.chunks_skipped)),
         ]

@@ -40,6 +40,7 @@ BENCHES = [
     "bench_louvain",
     "bench_sem_vs_inmem",
     "bench_density",
+    "bench_direction",
     "bench_kernels",
 ]
 
@@ -84,6 +85,14 @@ CLAIMS = [
      "Compact scan at 0.1% frontier is far cheaper than at 100%"),
     ("density", "compact_vs_flat", "sparsest_speedup_x", lambda v: v > 3.0,
      "At the sparse tail, compacted SEM beats the in-memory full pass"),
+    ("direction", "rmat_adaptive", "vs_best_static_x", lambda v: v <= 1.15,
+     "Beamer α/β: adaptive BFS at/below the best static direction (RMAT)"),
+    ("direction", "path_adaptive", "vs_best_static_x", lambda v: v <= 1.15,
+     "Beamer β gate pins adaptive to push on a high-diameter path graph"),
+    ("direction", "rmat", "modes_agree", lambda v: v == 1.0,
+     "Direction changes wall-clock/bytes, never levels or messages (RMAT)"),
+    ("direction", "path", "modes_agree", lambda v: v == 1.0,
+     "Direction changes wall-clock/bytes, never levels or messages (path)"),
     ("spmv_kernel", "local_0.05", "tile_skip_ratio", lambda v: v > 0.5,
      "Kernel: frontier block skipping elides most tile DMAs"),
     ("decode_attn_kernel", "window_256_vs_full", "fetch_reduction_x",
@@ -93,16 +102,19 @@ CLAIMS = [
 
 
 def smoke(json_out: str | None = None) -> int:
-    """Seconds-fast blocked-backend + compaction exercise (see docstring)."""
+    """Seconds-fast blocked-backend + compaction exercise (see docstring),
+    plus a mini direction sweep: push/pull/adaptive BFS must agree on
+    levels AND messages (noise-free correctness gate), with the per-mode
+    runtime/byte rows recorded for the perf-trajectory artifact."""
     import jax
     import jax.numpy as jnp
     import numpy as np
 
     from repro.algs import bfs_multi, pagerank_push
     from repro.core import device_graph
-    from repro.graph.generators import rmat
+    from repro.graph.generators import path_graph, rmat
 
-    from . import bench_density
+    from . import bench_density, bench_direction
     from .common import timeit
 
     t0 = time.time()
@@ -150,11 +162,27 @@ def smoke(json_out: str | None = None) -> int:
     dens_speedup = times["compact"][0] / times["compact"][-1]
     dens_ok = dens_speedup >= 2.0
 
+    # mini direction sweep: per-superstep push/pull/adaptive dispatch must
+    # never change levels or messages; runtimes ride along as artifacts
+    # (wall-clock ratios at this scale are scheduler noise, so they are
+    # recorded but do not gate).
+    gp = path_graph(512)
+    gd8 = rmat(8, edge_factor=8, seed=5, symmetrize=True)
+    sgd8 = device_graph(gd8, chunk_size=64)
+    drows2, ratios = bench_direction.sweep(
+        [("rmat", sgd8, int(jnp.argmax(sgd8.out_degree))),
+         ("path", device_graph(gp, chunk_size=64), 0)],
+        repeats=2, label="smoke_direction",
+    )
+    rows += drows2
+    dir_ok = all(agree == 1.0 for _, agree in ratios.values())
+
     print_rows(rows)
-    ok = err < 1e-5 and bfs_ok and dens_ok
+    ok = err < 1e-5 and bfs_ok and dens_ok and dir_ok
     print(f"# smoke {'PASS' if ok else 'FAIL'} in {time.time() - t0:.1f}s "
           f"(pagerank maxerr {err:.2g}, bfs equal {bfs_ok}, "
-          f"compact sparse speedup {dens_speedup:.1f}x)")
+          f"compact sparse speedup {dens_speedup:.1f}x, "
+          f"direction modes agree {dir_ok})")
     if json_out:
         _write_json(json_out, rows, ok=ok, mode="smoke")
     return 0 if ok else 1

@@ -1,6 +1,12 @@
 """The paper's scenario end-to-end: run the whole Graphyti library over one
 SEM graph and report the per-algorithm I/O ledger.
 
+One :class:`~repro.core.ExecutionPolicy` drives every algorithm's engine
+dispatch — direction='auto' gives the traversals (diameter's BFS sweeps,
+betweenness forward) Beamer-style push↔pull switching, chunk_cap +
+adaptive_cap keep draining frontiers on pow2-bucketed compact work-lists,
+and the p2p arm takes the sparse tails.
+
     PYTHONPATH=src python examples/graph_analytics.py [--scale 11]
 """
 import argparse
@@ -20,7 +26,7 @@ from repro.algs import (
     louvain,
     pagerank_push,
 )
-from repro.core import EDGE_RECORD_BYTES, device_graph
+from repro.core import ExecutionPolicy, device_graph
 from repro.graph.generators import rmat
 
 
@@ -31,27 +37,40 @@ def main() -> int:
 
     g = rmat(args.scale, edge_factor=8, seed=3, symmetrize=True)
     sg = device_graph(g, chunk_size=2048)
-    print(f"graph: n={g.n} m={g.m} | ledger: MB read / requests / supersteps")
+    # One policy object replaces the per-algorithm knob sprawl: the engine
+    # owns direction, density dispatch, and work-list sizing (paper §4.2).
+    policy = ExecutionPolicy(
+        direction="auto",                 # Beamer push<->pull per superstep
+        backend="compact",                # frontier-compacted chunk scans
+        chunk_cap=sg.out_store.num_chunks,
+        adaptive_cap=True,                # pow2 work-list re-bucketing
+        switch_fraction=0.10,             # p2p on the sparse tail
+        vcap=max(64, g.n // 4),
+        ecap=max(256, g.m // 10),
+    )
+    print(f"graph: n={g.n} m={g.m} | policy: {policy.direction}/"
+          f"{policy.backend} | ledger: MB read / requests / supersteps")
 
     ledger = []
 
     def record(name, io, steps, t):
-        mb = int(io.records) * EDGE_RECORD_BYTES / 1e6
+        mb = io.bytes() / 1e6  # layout-aware bytes, not slot counts
         ledger.append((name, mb, int(io.requests), int(steps), t))
         print(f"  {name:12s} {mb:9.2f} MB {int(io.requests):9d} req "
               f"{int(steps):5d} steps {t:7.2f}s")
 
     t0 = time.time()
-    ranks, io, steps = jax.jit(lambda: pagerank_push(sg))()
+    ranks, io, steps = jax.jit(lambda: pagerank_push(sg, policy=policy))()
     record("pagerank", io, steps, time.time() - t0)
 
     t0 = time.time()
-    core, io, steps = jax.jit(lambda: coreness(sg))()
+    core, io, steps = jax.jit(lambda: coreness(sg, policy=policy))()
     record("coreness", io, steps, time.time() - t0)
     print(f"    kmax = {int(core.max())}")
 
     t0 = time.time()
-    est, io, steps = diameter_multisource(sg, num_sources=16, sweeps=1)
+    est, io, steps = diameter_multisource(sg, num_sources=16, sweeps=1,
+                                          policy=policy)
     record("diameter", io, steps, time.time() - t0)
     print(f"    estimate = {int(est)}")
 

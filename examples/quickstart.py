@@ -13,7 +13,7 @@ sys.path.insert(0, "src")
 import jax
 
 from repro.algs import coreness, pagerank_push, pagerank_pull
-from repro.core import EDGE_RECORD_BYTES, device_graph
+from repro.core import device_graph
 from repro.graph.generators import rmat
 
 # 1. A power-law graph (2^12 vertices, ~65k edges), Twitter-like skew.
@@ -28,11 +28,11 @@ ranks_push, io_push, iters = jax.jit(lambda: pagerank_push(sg))()
 ranks_pull, io_pull, _ = jax.jit(lambda: pagerank_pull(sg))()
 print(f"pagerank: {int(iters)} supersteps, top vertex {int(ranks_push.argmax())}")
 print(
-    f"  push: {int(io_push.records) * EDGE_RECORD_BYTES / 1e6:8.2f} MB read, "
+    f"  push: {io_push.bytes() / 1e6:8.2f} MB read, "
     f"{int(io_push.requests):8d} requests"
 )
 print(
-    f"  pull: {int(io_pull.records) * EDGE_RECORD_BYTES / 1e6:8.2f} MB read, "
+    f"  pull: {io_pull.bytes() / 1e6:8.2f} MB read, "
     f"{int(io_pull.requests):8d} requests"
 )
 print(

@@ -24,16 +24,27 @@ reductions under the plus_times semiring.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..core import IOStats, SemGraph, bsp_run, sem_spmv, spmv
-from ..core.sem import chunk_activity
+from ..core import (
+    ExecutionPolicy,
+    IOStats,
+    SemGraph,
+    as_policy,
+    bsp_run,
+    sem_spmv,
+    traverse,
+)
+from ..core.sem import _store_record_bytes, chunk_activity
 from ..core.semiring import PLUS_TIMES
 
 __all__ = ["bc_unisource", "bc_multisource", "bc_fused"]
+
+# Historical BC behavior: pure multicast (no p2p arm), static push.
+_BC_DEFAULT = ExecutionPolicy(switch_fraction=None)
 
 
 class _FwdState(NamedTuple):
@@ -45,12 +56,15 @@ class _FwdState(NamedTuple):
 
 
 def _forward(sg: SemGraph, sources: jnp.ndarray, max_iters: int,
-             backend: str = "scan", chunk_cap: int | None = None):
+             pol: ExecutionPolicy):
     """Synchronous multi-source BFS with path counting.
 
     The K source lanes ride the engine's lane dimension — under
     ``backend='blocked'`` they map straight onto the kernel's K dimension,
     so one tile fetch serves all K searches (§4.4 multi-source batching).
+    The step is a frontier expansion, so ``direction='auto'`` policies get
+    Beamer push↔pull switching (sigma sums then accumulate gather-side;
+    same values up to float summation order).
     """
     n = sg.n
     K = sources.shape[0]
@@ -61,9 +75,10 @@ def _forward(sg: SemGraph, sources: jnp.ndarray, max_iters: int,
 
     def step(s: _FwdState):
         active = jnp.any(s.frontier, axis=1)
+        unexplored = jnp.any(s.dist < 0, axis=1)
         send = jnp.where(s.frontier, s.sigma, 0.0)
-        recv, st = spmv(sg, send, active, PLUS_TIMES, direction="out",
-                        backend=backend, chunk_cap=chunk_cap)
+        recv, st = traverse(sg, send, active, PLUS_TIMES, policy=pol,
+                            unexplored=unexplored)
         newly = (recv > 0) & (s.dist < 0)
         sigma = jnp.where(newly, recv, s.sigma)
         dist = jnp.where(newly, s.level + 1, s.dist)
@@ -82,8 +97,13 @@ def _forward(sg: SemGraph, sources: jnp.ndarray, max_iters: int,
 
 
 def _backward(sg: SemGraph, sigma, dist, max_level, max_iters,
-              backend: str = "scan", chunk_cap: int | None = None):
-    """Synchronous dependency accumulation, level = max_level-1 .. 0."""
+              pol: ExecutionPolicy):
+    """Synchronous dependency accumulation, level = max_level-1 .. 0.
+
+    Messages flow *against* the edge direction (reverse push), which the
+    p2p gather and the pull arm have no form for — the engine statically
+    keeps reverse flows on the multicast/compact dispatch.
+    """
     n, K = sigma.shape
 
     def step(carry):
@@ -93,8 +113,8 @@ def _backward(sg: SemGraph, sigma, dist, max_level, max_iters,
         x = jnp.where(send_mask, (1.0 + delta) / jnp.maximum(sigma, 1e-30), 0.0)
         recv_mask = dist == level
         active = jnp.any(recv_mask, axis=1)
-        recv, st = spmv(sg, x, active, PLUS_TIMES, direction="out",
-                        reverse=True, backend=backend, chunk_cap=chunk_cap)
+        recv, st = traverse(sg, x, active, PLUS_TIMES, reverse=True,
+                            policy=pol.with_(direction="out"))
         delta = jnp.where(recv_mask, delta + sigma * recv, delta)
         io = (io + st)._replace(supersteps=io.supersteps + 1)
         return delta, level - 1, io
@@ -119,30 +139,33 @@ def _finish(delta, sources):
 
 def bc_multisource(
     sg: SemGraph, sources: jnp.ndarray, *, max_iters: int | None = None,
-    backend: str = "scan", chunk_cap: int | None = None,
+    backend: str | None = None, chunk_cap: int | None = None,
+    policy: Optional[ExecutionPolicy] = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
     """Synchronous multi-source Brandes. Returns (bc[n], IOStats, supersteps).
 
-    ``backend='blocked'`` streams both the forward sigma pushes and the
-    backward dependency pulls through the Pallas tile kernel (the backward
-    pass uses the transposed ``out_blocked_rev`` view).  ``chunk_cap`` with
-    ``backend='compact'`` compacts both phases' chunk work-lists — the
-    per-level frontiers of Brandes are narrow, so most supersteps touch a
-    handful of chunks.
+    ``policy``: ``backend='blocked'`` streams both the forward sigma pushes
+    and the backward dependency flows through the Pallas tile kernel (the
+    backward pass uses the transposed ``out_blocked_rev`` view);
+    ``chunk_cap`` compacts both phases' work-lists — the per-level
+    frontiers of Brandes are narrow, so most supersteps touch a handful of
+    chunks; ``direction='auto'`` makes the forward search
+    direction-optimizing (the backward phase stays on reverse push).
     """
+    pol = as_policy(policy, _BC_DEFAULT, backend=backend, chunk_cap=chunk_cap)
     sources = jnp.asarray(sources, jnp.int32)
     max_iters = max_iters or sg.n + 1
-    fwd, fwd_iters = _forward(sg, sources, max_iters, backend, chunk_cap)
+    fwd, fwd_iters = _forward(sg, sources, max_iters, pol)
     max_level = jnp.max(jnp.where(fwd.dist < 0, -1, fwd.dist))
-    delta, bio = _backward(sg, fwd.sigma, fwd.dist, max_level, max_iters,
-                           backend, chunk_cap)
+    delta, bio = _backward(sg, fwd.sigma, fwd.dist, max_level, max_iters, pol)
     io = fwd.io + bio
     return _finish(delta, sources), io, fwd_iters + jnp.maximum(max_level, 0)
 
 
 def bc_unisource(
     sg: SemGraph, sources: jnp.ndarray, *, max_iters: int | None = None,
-    backend: str = "scan", chunk_cap: int | None = None,
+    backend: str | None = None, chunk_cap: int | None = None,
+    policy: Optional[ExecutionPolicy] = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
     """K separate single-source runs (the Fig. 6 baseline)."""
     sources = jnp.asarray(sources, jnp.int32)
@@ -152,7 +175,7 @@ def bc_unisource(
     for i in range(sources.shape[0]):
         b, st, it = bc_multisource(
             sg, sources[i : i + 1], max_iters=max_iters, backend=backend,
-            chunk_cap=chunk_cap,
+            chunk_cap=chunk_cap, policy=policy,
         )
         bc, io, steps = bc + b, io + st, steps + it
     return bc, io, steps
@@ -228,8 +251,11 @@ def bc_fused(
         # Requests are still issued by both phases; the page cache serves the
         # second phase's overlapping chunks for free (records saved).
         io = s.io + st_f + st_b
+        saved = both * sg.out_store.chunk_size
         io = io._replace(
-            records=io.records - both * sg.out_store.chunk_size,
+            records=io.records - saved,
+            bytes_moved=io.bytes_moved
+            - saved * _store_record_bytes(sg.out_store.w),
             supersteps=io.supersteps + 1,
         )
 

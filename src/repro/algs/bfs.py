@@ -1,4 +1,4 @@
-"""Breadth-first search: uni-source and multi-source — paper §4.3.
+"""Breadth-first search: uni-source, multi-source, direction-optimizing.
 
 Principle P4 — *decouple algorithm development from framework constructs*.
 
@@ -8,19 +8,30 @@ a bool lane dimension vectorizes over the VPU instead of bit-twiddling a
 packed word).  Every chunk fetched in a superstep serves *all* K searches —
 the page-cache-reuse effect of Fig. 4/5 — so multi-source I/O grows far
 slower than K× the uni-source I/O.
+
+Direction optimization: the step is expressed as a frontier-expansion
+:func:`repro.core.traverse`, so an :class:`~repro.core.ExecutionPolicy`
+with ``direction='auto'`` gets Beamer-style push↔pull switching — the
+engine streams the *unexplored* side's in-edges in the middle supersteps
+where the frontier's out-edge mass dwarfs what is left to discover.
+Levels and ``messages`` are bitwise-identical to static push in every
+mode; only wall-clock and bytes change.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 
-from ..core import IOStats, SemGraph, bsp_run, spmv
+from ..core import ExecutionPolicy, IOStats, SemGraph, as_policy, bsp_run, traverse
 from ..core.semiring import OR_AND
 
 __all__ = ["bfs_multi", "bfs_uni", "UNREACHED"]
 
 UNREACHED = jnp.int32(jnp.iinfo(jnp.int32).max)
+
+# Historical BFS behavior: pure multicast (no p2p arm) static push.
+_BFS_DEFAULT = ExecutionPolicy(switch_fraction=None)
 
 
 class BFSState(NamedTuple):
@@ -36,24 +47,25 @@ def bfs_multi(
     sources: jnp.ndarray,
     *,
     max_iters: int | None = None,
-    backend: str = "scan",
+    backend: str | None = None,
     chunk_cap: int | None = None,
+    policy: Optional[ExecutionPolicy] = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
     """K concurrent BFS over the out-edges.
 
     Args:
       sources: int32[K] source vertex ids.
-      backend: 'scan' (chunked), 'compact' (frontier-compacted chunk
-        work-list — the early ramp-up and late drain of a BFS touch few
-        chunks, so supersteps cost ~active chunks instead of all chunks),
-        or 'blocked' / 'blocked_compact' (Pallas tiles; the K lanes map
-        onto the kernel's multi-source lane dimension, so every fetched
-        tile serves all K searches at once — §4.3 batching on the MXU).
-      chunk_cap: work-list capacity for the 'compact' backend.
+      policy: the engine :class:`~repro.core.ExecutionPolicy`.
+        ``direction='auto'`` enables Beamer push↔pull switching (needs a
+        graph with pull views); ``adaptive_cap=True`` re-buckets the
+        compact work-list per superstep, which is what keeps the long
+        drain of a high-diameter BFS on single-chunk scans.
+      backend / chunk_cap: deprecated — merged into ``policy``.
 
     Returns:
       (dist int32[n, K] — UNREACHED where not reached, IOStats, supersteps).
     """
+    pol = as_policy(policy, _BFS_DEFAULT, backend=backend, chunk_cap=chunk_cap)
     n = sg.n
     sources = jnp.asarray(sources, jnp.int32)
     K = sources.shape[0]
@@ -65,8 +77,11 @@ def bfs_multi(
 
     def step(s: BFSState) -> tuple[BFSState, jnp.ndarray]:
         active = jnp.any(s.frontier, axis=1)
-        nxt, st = spmv(sg, s.frontier, active, OR_AND, direction="out",
-                       backend=backend, chunk_cap=chunk_cap)
+        # Pull candidates: vertices unexplored in at least one lane — the
+        # only rows a BFS step ever reads (newly = nxt & ~reached).
+        unexplored = ~jnp.all(s.reached, axis=1)
+        nxt, st = traverse(sg, s.frontier, active, OR_AND, policy=pol,
+                           unexplored=unexplored)
         newly = nxt & ~s.reached
         reached = s.reached | newly
         dist = jnp.where(newly, s.level + 1, s.dist)
@@ -87,11 +102,12 @@ def bfs_multi(
 
 def bfs_uni(
     sg: SemGraph, source: int, *, max_iters: int | None = None,
-    backend: str = "scan", chunk_cap: int | None = None,
+    backend: str | None = None, chunk_cap: int | None = None,
+    policy: Optional[ExecutionPolicy] = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
     """Single-source BFS (the K=1 degenerate case, for the Fig. 5 baseline)."""
     dist, io, iters = bfs_multi(
         sg, jnp.asarray([source], jnp.int32), max_iters=max_iters,
-        backend=backend, chunk_cap=chunk_cap,
+        backend=backend, chunk_cap=chunk_cap, policy=policy,
     )
     return dist[:, 0], io, iters

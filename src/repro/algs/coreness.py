@@ -15,12 +15,20 @@ which equals total degree after symmetrization.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..core import IOStats, SemGraph, bsp_run, hybrid_spmv, p2p_spmv, spmv
+from ..core import (
+    ExecutionPolicy,
+    IOStats,
+    SemGraph,
+    as_policy,
+    bsp_run,
+    p2p_spmv,
+    traverse,
+)
 from ..core.semiring import PLUS_TIMES
 
 __all__ = ["coreness"]
@@ -41,9 +49,10 @@ def coreness(
     *,
     prune: bool = True,
     messaging: str = "hybrid",
-    switch_fraction: float = 0.10,
+    switch_fraction: float | None = None,
     max_supersteps: int | None = None,
     chunk_cap: int | None = None,
+    policy: Optional[ExecutionPolicy] = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
     """k-core decomposition. Returns (core_number[n], IOStats, supersteps).
 
@@ -54,10 +63,12 @@ def coreness(
     remove any vertex, so their supersteps (and their frontier scans) are
     pure waste.
 
-    Peeling frontiers are usually tiny (the vertices that just dropped to
-    degree k), so ``chunk_cap`` + ``messaging='hybrid'`` routes the
-    mid-density removals through the compact scan — the engine's three-way
-    dispatch (P2 paid in wall-clock, not just counters).
+    ``messaging`` keeps the Fig. 3 benchmark triple: 'dense' is pure
+    multicast, 'p2p' always row-exact fetches, 'hybrid' the engine's
+    density dispatch.  ``policy`` (new API) refines the 'dense'/'hybrid'
+    execution — peeling frontiers are usually tiny (the vertices that just
+    dropped to degree k), so a ``chunk_cap`` routes mid-density removals
+    through the compact scan (P2 paid in wall-clock, not just counters).
     """
     assert messaging in ("dense", "p2p", "hybrid")
     n = sg.n
@@ -65,28 +76,24 @@ def coreness(
     ecap = max(int(sg.m), 1)
     if max_supersteps is None:
         max_supersteps = 4 * n + 64
+    pol = as_policy(policy, None, chunk_cap=chunk_cap,
+                    switch_fraction=switch_fraction)
+    pol = pol.with_(direction="out")
+    if messaging == "dense":
+        pol = pol.with_(switch_fraction=None)
+    else:
+        pol = pol.with_(vcap=pol.vcap if pol.vcap is not None else vcap,
+                        ecap=pol.ecap if pol.ecap is not None else ecap)
 
     def decrement(removed: jnp.ndarray, deg: jnp.ndarray, io: IOStats):
         """Push -1 along out-edges of removed vertices; returns new degrees."""
         x = jnp.where(removed, -1.0, 0.0)
-        if messaging == "dense":
-            delta, st = spmv(sg, x, removed, PLUS_TIMES, direction="out")
-        elif messaging == "p2p":
+        if messaging == "p2p":
             delta, st = p2p_spmv(
                 sg, x, removed, PLUS_TIMES, direction="out", vcap=vcap, ecap=ecap
             )
         else:
-            delta, st = hybrid_spmv(
-                sg,
-                x,
-                removed,
-                PLUS_TIMES,
-                direction="out",
-                vcap=vcap,
-                ecap=ecap,
-                switch_fraction=switch_fraction,
-                chunk_cap=chunk_cap,
-            )
+            delta, st = traverse(sg, x, removed, PLUS_TIMES, policy=pol)
         return deg + delta.astype(jnp.int32), io + st
 
     def step(s: CoreState) -> tuple[CoreState, jnp.ndarray]:

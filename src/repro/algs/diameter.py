@@ -12,9 +12,11 @@ fetches, K× the supersteps.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
-from ..core import IOStats, SemGraph
+from ..core import ExecutionPolicy, IOStats, SemGraph
 from .bfs import UNREACHED, bfs_multi, bfs_uni
 
 __all__ = ["diameter_multisource", "diameter_unisource"]
@@ -36,25 +38,29 @@ def diameter_multisource(
     num_sources: int = 32,
     sweeps: int = 2,
     seed_vertex: int | None = None,
-    backend: str = "scan",
+    backend: str | None = None,
     chunk_cap: int | None = None,
+    policy: Optional[ExecutionPolicy] = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
     """Estimate the diameter with ``sweeps`` rounds of K-source BFS.
 
-    ``backend``/``chunk_cap`` are forwarded to the underlying BFS — the
-    sweeps spend most supersteps on narrow frontiers, where the compact
-    backend pays.  Returns (estimate, IOStats, supersteps).
+    ``policy`` (or the deprecated ``backend``/``chunk_cap``) is forwarded
+    to the underlying BFS — the sweeps spend most supersteps on narrow
+    frontiers, where the compact backend pays, and high-diameter inputs
+    are exactly where ``direction='auto'`` keeps the drain on push while
+    low-diameter sweeps flip to pull.  Returns (estimate, IOStats,
+    supersteps).
     """
     if seed_vertex is None:
         seed_vertex = int(jnp.argmax(sg.out_degree))
     dist, io, iters = bfs_uni(sg, seed_vertex, backend=backend,
-                              chunk_cap=chunk_cap)
+                              chunk_cap=chunk_cap, policy=policy)
     estimate = _max_dist(dist)
     total_steps = iters
     for _ in range(sweeps):
         sources = _farthest(dist, num_sources)
         dist_k, io_k, iters_k = bfs_multi(sg, sources, backend=backend,
-                                          chunk_cap=chunk_cap)
+                                          chunk_cap=chunk_cap, policy=policy)
         estimate = jnp.maximum(estimate, _max_dist(dist_k))
         io = io + io_k
         total_steps = total_steps + iters_k
@@ -70,14 +76,15 @@ def diameter_unisource(
     num_sources: int = 32,
     sweeps: int = 2,
     seed_vertex: int | None = None,
-    backend: str = "scan",
+    backend: str | None = None,
     chunk_cap: int | None = None,
+    policy: Optional[ExecutionPolicy] = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
     """Identical sweeps, but each source runs its own full BFS (no sharing)."""
     if seed_vertex is None:
         seed_vertex = int(jnp.argmax(sg.out_degree))
     dist, io, iters = bfs_uni(sg, seed_vertex, backend=backend,
-                              chunk_cap=chunk_cap)
+                              chunk_cap=chunk_cap, policy=policy)
     estimate = _max_dist(dist)
     total_steps = iters
     for _ in range(sweeps):
@@ -85,7 +92,7 @@ def diameter_unisource(
         best = jnp.full(sg.n, -1, jnp.int32)
         for i in range(num_sources):
             d_i, io_i, it_i = bfs_uni(sg, int(sources[i]), backend=backend,
-                                      chunk_cap=chunk_cap)
+                                      chunk_cap=chunk_cap, policy=policy)
             estimate = jnp.maximum(estimate, _max_dist(d_i))
             io = io + io_i
             total_steps = total_steps + it_i

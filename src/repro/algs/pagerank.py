@@ -16,15 +16,26 @@ so they agree to tolerance; only their I/O behaviour differs (Fig. 2).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..core import IOStats, SemGraph, bsp_run, flat_spmv, hybrid_spmv, spmv
+from ..core import (
+    ExecutionPolicy,
+    IOStats,
+    SemGraph,
+    as_policy,
+    bsp_run,
+    flat_spmv,
+    traverse,
+)
 from ..core.semiring import OR_AND, PLUS_TIMES
 
 __all__ = ["pagerank_pull", "pagerank_push", "pagerank_inmem"]
+
+# PR-pull's historical execution: pure multicast, no p2p arm.
+_PULL_DEFAULT = ExecutionPolicy(switch_fraction=None)
 
 
 class PRState(NamedTuple):
@@ -46,8 +57,9 @@ def pagerank_pull(
     damping: float = 0.85,
     tol: float = 1e-3,
     max_iters: int = 100,
-    backend: str = "scan",
+    backend: str | None = None,
     chunk_cap: int | None = None,
+    policy: Optional[ExecutionPolicy] = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
     """Pregel/Turi-style PR-pull (the paper's baseline, §4.1).
 
@@ -58,7 +70,13 @@ def pagerank_pull(
     costs a second pass over its out-edge chunks.  Both passes are real
     chunk I/O, exactly as in FlashGraph where the vertex must read its edge
     lists to know gather sources and multicast recipients.
+
+    The dataflow directions are fixed by the algorithm (gather is 'in',
+    the activation multicast is 'out'); ``policy`` controls everything
+    else (backend, caps, p2p).
     """
+    pol = as_policy(policy, _PULL_DEFAULT, backend=backend,
+                    chunk_cap=chunk_cap)
     n = sg.n
     base = (1.0 - damping) / n
     thresh = tol / n
@@ -66,13 +84,13 @@ def pagerank_pull(
     def step(s: PRState) -> tuple[PRState, jnp.ndarray]:
         # (1) active destinations gather x[src]/deg[src] over ALL in-edges.
         x = _out_contrib(sg, s.rank)
-        acc, io = spmv(sg, x, s.active, PLUS_TIMES, direction="in",
-                       backend=backend, chunk_cap=chunk_cap)
+        acc, io = traverse(sg, x, s.active, PLUS_TIMES,
+                           policy=pol.with_(direction="in"))
         new_rank = jnp.where(s.active, base + damping * acc, s.rank)
         changed = s.active & (jnp.abs(new_rank - s.rank) > thresh)
         # (2) changed vertices multicast activation along their out-edges.
-        woke, io2 = spmv(sg, changed, changed, OR_AND, direction="out",
-                         backend=backend, chunk_cap=chunk_cap)
+        woke, io2 = traverse(sg, changed, changed, OR_AND,
+                             policy=pol.with_(direction="out"))
         io = (io + io2)._replace(supersteps=io.supersteps + 1)
         done = ~jnp.any(changed)
         return PRState(new_rank, s.rank, woke, s.io + io), done
@@ -94,20 +112,21 @@ def pagerank_push(
     tol: float = 1e-3,
     max_iters: int = 100,
     ecap: int | None = None,
-    switch_fraction: float = 0.10,
-    backend: str = "scan",
+    switch_fraction: float | None = None,
+    backend: str | None = None,
     chunk_cap: int | None = None,
+    policy: Optional[ExecutionPolicy] = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
     """Graphyti's delta PR-push (§4.1): per superstep, only vertices whose
     rank *changed* beyond the threshold push their delta along out-edges —
     one chunk pass over the minimal set, versus pull's in-gather over the
     (larger) activated set plus its activation multicast.
 
-    ``backend='blocked'`` routes the dense multicast supersteps through the
-    Pallas tile kernel (requires ``device_graph(..., blocked=True)``).
-    ``chunk_cap`` enables the engine's three-way dispatch: mid-density
-    supersteps run the frontier-compacted scan instead of the full
-    multicast, so the shrinking active set pays off in wall-clock.
+    ``policy`` drives the engine dispatch: ``backend='blocked'`` routes
+    dense multicast supersteps through the Pallas tile kernel,
+    ``chunk_cap`` enables the compact mid-band, and the p2p arm (on by
+    default here, matching Graphyti's hybrid messaging) takes the sparse
+    tail.  The push direction is fixed by the algorithm.
 
     Same linear iteration as PR-pull (rank_{t+1} = rank_t + c·AᵀD⁻¹·Δ_t),
     hence the same superstep count and fixed point; only the I/O differs.
@@ -116,20 +135,21 @@ def pagerank_push(
     n = sg.n
     base = (1.0 - damping) / n
     thresh = tol / n
-    if ecap is None:
-        ecap = max(4096, sg.m // 8)
+    pol = as_policy(policy, None, backend=backend, chunk_cap=chunk_cap,
+                    ecap=ecap, switch_fraction=switch_fraction)
+    pol = pol.with_(direction="out")
+    if pol.vcap is None:
+        pol = pol.with_(vcap=n)
+    if pol.ecap is None:
+        pol = pol.with_(ecap=max(4096, sg.m // 8))
 
     def step(s: PRState) -> tuple[PRState, jnp.ndarray]:
         send = jnp.where(s.active, s.aux, 0.0)
         x = damping * _out_contrib(sg, send)
         # Graphyti push issues *selective* I/O: row-exact point-to-point
-        # fetches once the frontier is sparse (hybrid_spmv), chunked
-        # multicast while dense.
-        recv, io = hybrid_spmv(
-            sg, x, s.active, PLUS_TIMES, direction="out",
-            vcap=n, ecap=ecap, switch_fraction=switch_fraction,
-            backend=backend, chunk_cap=chunk_cap,
-        )
+        # fetches once the frontier is sparse, chunked multicast while
+        # dense (the engine's dispatch).
+        recv, io = traverse(sg, x, s.active, PLUS_TIMES, policy=pol)
         rank = s.rank + recv
         # Sub-threshold deltas are RETAINED (not dropped): they accumulate
         # until worth sending, so total mass is conserved and the error stays

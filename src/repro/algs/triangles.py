@@ -117,6 +117,7 @@ def count_triangles(
     variant: str = "restarted",
     ordered: bool = True,
     hash_threshold: int = 0,
+    policy=None,
 ) -> TriangleResult:
     """Count triangles of an undirected (symmetrized) graph on the host.
 
@@ -125,9 +126,14 @@ def count_triangles(
     element, one "comparison" per probe) instead of searched — the
     high-degree-vertex fast path of §4.5.
 
-    This is the reference/bench path; ``triangles_blocked_mxu`` is the
-    device path.
+    ``policy`` (an engine :class:`~repro.core.ExecutionPolicy`) selects the
+    execution the same way it does for the SpMV algorithms: a blocked
+    backend routes to :func:`triangles_blocked_mxu` (the MXU tile path,
+    which has no comparison/request ledger — those fields come back 0);
+    anything else runs this host reference path.
     """
+    if policy is not None and policy.backend in ("blocked", "blocked_compact"):
+        return TriangleResult(triangles_blocked_mxu(g), 0, 0, 0)
     assert variant in ("scan", "binary", "restarted", "hash")
     if ordered:
         _, adj = _orient(g)

@@ -1,90 +1,101 @@
-"""BSP driver, hybrid messaging dispatch, and the in-memory baseline.
+"""BSP driver, the ExecutionPolicy dispatch stack, and the in-memory baseline.
 
 The engine mirrors FlashGraph's execution model:
 
   * :func:`bsp_run` — the bulk-synchronous loop.  One iteration of the
     ``lax.while_loop`` is one BSP superstep; the loop exits when the frontier
     drains (all vertices inactive), i.e. the global barrier condition.
-  * :func:`hybrid_spmv` — the multicast/point-to-point switch (paper §4.2,
-    "minimize messaging").  Dense frontiers take the multicast path; sparse
-    frontiers take row-exact point-to-point fetches.  The switch is a
-    ``lax.cond`` so only one path executes.
+  * :class:`ExecutionPolicy` + :func:`traverse` — ONE object owning every
+    execution decision the paper assigns to the framework rather than the
+    application (§4.2, "the engine owns I/O minimization"): multicast
+    backend, work-list capacities, push/pull direction, and all switch
+    thresholds.  Algorithms pass a policy; the engine picks the cheapest
+    execution per superstep.
   * :func:`flat_spmv` — the *in-memory* baseline: one unchunked segment
     reduction over all m edges, no skipping, no counting.  This is what the
     "SEM achieves 80% of in-memory performance" claim is measured against.
 
+Four-way dispatch
+-----------------
+:func:`traverse` composes two orthogonal switches, both under ``lax.cond``
+so only one path does work per superstep:
+
+**Direction (push vs pull, Beamer-style).**  A frontier's logical action is
+"multicast my value along my out-edges".  Two executions exist:
+
+  * **push** (``direction='out'``): stream the *frontier's* out-edge
+    chunks/tiles, scatter onto destinations.  Cost tracks the frontier's
+    edge mass ``m_f``.
+  * **pull** (``direction='in'``): stream the *candidate* (unexplored)
+    vertices' in-edge chunks/tiles, gather from frontier sources.  Cost
+    tracks the unexplored mass ``m_u`` — far smaller than ``m_f`` in the
+    middle supersteps of a BFS on a low-diameter graph, where the frontier
+    covers most edges but almost everything is already explored.
+
+  With ``direction='auto'`` the engine applies Beamer's α/β heuristic per
+  superstep: pull when ``m_f · α > m_u`` (the frontier's mass overwhelms
+  what is left to discover) AND ``n_f · β > n`` (the frontier is not so
+  narrow that streaming candidate in-chunks over-fetches); push otherwise.
+  The decision is a device-side ``lax.cond`` — no host round-trip — and
+  accounting stays execution-invariant: ``messages`` always reports the
+  frontier's logical out-edge mass, whichever direction executed it
+  (compaction and direction change wall-clock and bytes, never the logical
+  message count).
+
+**Density (multicast / compact / p2p).**  Within the chosen direction, with
+C fetch units (chunks or tiles), A live units, e live edge mass, S the unit
+size:
+
+  * dense multicast  — O(C·S) work, best throughput per edge when most
+    units are live (A ≈ C): no compaction overhead, contiguous streaming.
+  * compact          — O(C) activity test + O(cap·S) work over a
+    prefix-sum-compacted work-list of live units.  Wins in the mid-density
+    band where A << C but e is still too large for p2p's static gather.
+    For the scan backend this is :func:`repro.core.sem.compact_spmv`; for
+    the blocked backend it is the permuted Pallas grid sized to the
+    policy's pow2 bucket.  ``adaptive_cap=True`` re-buckets the work-list
+    per superstep (``lax.switch`` over the pow2 sizes) from the live-unit
+    count, so a draining BFS runs each superstep on the smallest compiled
+    bucket that fits it.
+  * point-to-point   — O(ecap) gathered edge slots, row-exact bytes.  Wins
+    on the sparse tail (e <= switch_fraction·m and the static ``vcap`` /
+    ``ecap`` capacities fit), where even one live unit per live vertex
+    over-fetches.
+
 Backends
 --------
-The multicast step has four interchangeable executions, selected by
-``backend=`` on :func:`spmv` / :func:`hybrid_spmv`:
+The multicast/compact step has four interchangeable executions, selected by
+``ExecutionPolicy.backend`` (or ``backend=`` on :func:`spmv`):
 
   * ``'scan'`` — :func:`repro.core.sem.sem_spmv`: a ``lax.scan`` over
     fixed-size edge chunks with per-chunk activity tests.  Runs anywhere,
     needs only the chunk stores, and is row-exact in its I/O accounting.
-    This is the portable reference path.  Skips are *counted* but still
-    cost a sequential loop step, so wall-clock is O(total chunks).
   * ``'compact'`` — :func:`repro.core.sem.compact_spmv`: the frontier-
-    compacted scan.  Active chunk ids are prefix-sum compacted into a
-    dense work-list (``nonzero(size=chunk_cap)``), only those chunks'
-    rows are gathered, and the loop runs ``chunk_cap`` steps — skipped
-    chunks cost ~zero wall-clock, which is what makes the paper's
-    selective I/O claim (P1) a *time* win and not just an IOStats win.
-    Falls back to the full scan (a ``lax.cond``) when the live chunk
-    count overflows ``chunk_cap``; bitwise identical to ``'scan'`` either
-    way, with field-for-field equal IOStats.
+    compacted scan (work-list of live chunk ids, cap-length loop).
   * ``'blocked'`` — :func:`repro.kernels.spmv.blocked_spmv`: the Pallas TPU
     kernel streaming dense (Bd, Bs) edge tiles through the MXU, double-
-    buffering each tile's HBM->VMEM DMA behind the previous tile's matmul
-    and eliding the DMA entirely for tiles disjoint from the frontier — the
-    TPU-native analogue of SAFS async reads overlapping compute (the
-    paper's central performance mechanism).  Requires
-    ``device_graph(..., blocked=True)``; runs compiled on TPU and in
-    interpret mode elsewhere.  Frontier skipping is *block*-granular, so
-    the engine masks x (push) or the output rows (pull/reverse) to keep
-    results row-exact and identical to the scan path.
+    buffering each tile's HBM->VMEM DMA behind the previous tile's matmul —
+    the TPU-native analogue of SAFS async reads overlapping compute.
+    Requires ``device_graph(..., blocked=True)``.
   * ``'blocked_compact'`` — the same kernel on the frontier-compacted
-    grid: live tiles are permuted to the grid front (scalar-prefetched
-    permutation), tail steps redirect every index map to the already-
-    resident block and ``pl.when`` no-ops them, and a concrete frontier
-    shrinks the grid itself to a power-of-two bucket over the live count.
-    A sparse frontier costs ~``num_active`` real grid steps instead of T.
-  * The **point-to-point** path (:func:`repro.core.sem.p2p_spmv`) is
-    orthogonal: :func:`hybrid_spmv` switches to it when the frontier is
-    sparse regardless of the multicast backend, because row-exact fetches
-    beat any page/tile multicast once most blocks are dead.
+    (permuted, size-bucketed) grid.
 
-Three-way dispatch (:func:`hybrid_spmv` with ``chunk_cap``) — the cost
-model, with C total chunks, A live chunks, e live edge mass, S the chunk
-size:
-
-  * dense multicast  — O(C·S) work, best throughput per edge when most
-    chunks are live (A ≈ C): no compaction overhead, contiguous streaming.
-  * compact-scan     — O(C) activity test + O(chunk_cap·S) work.  Wins in
-    the mid-density band where A << C but e is still too large for p2p's
-    static gather. Requires ``chunk_cap``.
-  * point-to-point   — O(ecap) gathered edge slots, row-exact bytes.  Wins
-    on the sparse tail (e <= switch_fraction·m and the static ``vcap`` /
-    ``ecap`` capacities fit), where even one live chunk per live vertex
-    over-fetches.
-
-When each wins: ``scan`` for portability and row-exact I/O counting;
-``blocked`` for dense/medium frontiers where tile matmuls amortize the
-fetch (PageRank iterations, multi-source BFS/BC lanes — the K lane
-dimension of the kernel IS the §4.3/§4.4 multi-source batch); the compact
-variants whenever the frontier is expected to drain (BFS tails, coreness
-peeling); ``p2p`` for the sparse tail of a draining frontier.
+All backends serve both directions: push keys activity on source
+blocks/chunks and masks inactive senders; pull keys activity on
+destination blocks/chunks and masks inactive receiver rows — row-exact
+either way, identical to the scan path.
 
 IOStats are reported in the same units by all multicast backends:
 ``requests`` counts active major vertices whose block/chunk was fetched,
-``records`` the edge-record-equivalent of bytes actually moved (whole
-chunks, or whole dense tiles at 4 bytes/slot), ``chunks_skipped`` the
-elided fetch units (chunks or tiles), and ``messages`` the row-exact count
-of edge contributions from active majors (identical across backends).
-Compacted executions report identical IOStats to their full-grid
-counterparts — compaction changes wall-clock, never accounting.
+``records`` the edge-record-equivalent of data actually moved,
+``bytes_moved`` the layout-aware real bytes (weighted rows 12 B, bool
+occupancy tiles 1 bit/slot), ``chunks_skipped`` the elided fetch units, and
+``messages`` the row-exact logical message count (invariant across
+backends, compaction, AND direction).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable, Optional, Tuple
 
 import jax
@@ -95,17 +106,128 @@ from .sem import (
     IOStats,
     SemGraph,
     _pad_y_init,
+    bucket_index,
     chunk_activity,
     compact_spmv,
+    frontier_edge_mass,
     p2p_spmv,
     pad_state,
+    pow2_buckets,
     sem_spmv,
 )
 from .semiring import Semiring
 
-__all__ = ["bsp_run", "hybrid_spmv", "flat_spmv", "spmv", "blocked_backend_spmv"]
+__all__ = [
+    "ExecutionPolicy",
+    "as_policy",
+    "beamer_use_pull",
+    "bsp_run",
+    "hybrid_spmv",
+    "flat_spmv",
+    "spmv",
+    "traverse",
+    "blocked_backend_spmv",
+]
 
 State = Any
+
+
+# --------------------------------------------------------------------------
+# ExecutionPolicy: the one object algorithms hand the engine
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    """Every dispatch knob in one place (replaces the kwarg sprawl).
+
+    Attributes:
+      backend: multicast execution — 'scan' | 'compact' | 'blocked' |
+        'blocked_compact' (see the module docstring).
+      direction: 'out' (push), 'in' (pull), or 'auto' (Beamer-style
+        per-superstep switching — only meaningful for frontier-expansion
+        traversals, where :func:`traverse` receives an ``unexplored`` set;
+        otherwise 'auto' degrades to push).
+      chunk_cap: static work-list capacity for the compact mid-band, in
+        the backend's fetch units (chunks for 'scan'/'compact', tiles for
+        the blocked backends).  ``None`` disables the mid-band.
+      adaptive_cap: re-bucket the compact work-list per superstep to the
+        smallest pow2 size fitting the live-unit count (``lax.switch``
+        over the ~log2(cap) compiled buckets — no host round-trip).
+      vcap / ecap: static vertex/edge capacities of the point-to-point
+        gather; ``None`` resolves to n / m (always exact, rarely optimal).
+      switch_fraction: p2p engages when the frontier's edge mass is at
+        most this fraction of m (and the caps fit).  ``None`` disables
+        p2p entirely.
+      compact_fraction: the compact mid-band engages only while the live
+        unit count is at most this fraction of all units (past it, the
+        compaction gather costs more than the steps it saves).
+      alpha / beta: Beamer's direction-switch thresholds — pull when
+        ``m_f * alpha > m_u`` and ``n_f * beta > n`` (defaults follow the
+        Beamer paper's (14, 24) neighborhood).
+      interpret: force Pallas interpret mode for the blocked backends
+        (``None`` = auto: interpret everywhere but real TPUs).
+    """
+
+    backend: str = "scan"
+    direction: str = "out"
+    chunk_cap: Optional[int] = None
+    adaptive_cap: bool = False
+    vcap: Optional[int] = None
+    ecap: Optional[int] = None
+    switch_fraction: Optional[float] = 0.10
+    compact_fraction: float = 0.5
+    alpha: float = 14.0
+    beta: float = 24.0
+    interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.backend not in ("scan", "compact", "blocked", "blocked_compact"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.direction not in ("out", "in", "auto"):
+            raise ValueError(f"unknown direction {self.direction!r}")
+
+    def with_(self, **kw) -> "ExecutionPolicy":
+        """A copy with the given fields replaced."""
+        return dataclasses.replace(self, **kw)
+
+
+def as_policy(
+    policy: Optional[ExecutionPolicy],
+    default: Optional[ExecutionPolicy] = None,
+    **deprecated,
+) -> ExecutionPolicy:
+    """Merge an explicit policy with an algorithm's deprecated kwargs.
+
+    ``policy`` wins as the base (falling back to ``default``, then to a
+    plain :class:`ExecutionPolicy`); any deprecated kwarg the caller
+    actually passed (non-``None``) overrides the corresponding field, so
+    pre-policy call sites keep working unchanged.
+    """
+    base = policy if policy is not None else (default or ExecutionPolicy())
+    kw = {k: v for k, v in deprecated.items() if v is not None}
+    return dataclasses.replace(base, **kw) if kw else base
+
+
+def beamer_use_pull(
+    frontier_edges: jnp.ndarray,
+    unexplored_edges: jnp.ndarray,
+    frontier_verts: jnp.ndarray,
+    n: int,
+    *,
+    alpha: float = 14.0,
+    beta: float = 24.0,
+) -> jnp.ndarray:
+    """Beamer's direction heuristic as a traced bool.
+
+    Pull pays when the frontier's out-edge mass dwarfs the unexplored mass
+    (``m_f * alpha > m_u`` — most push messages would land on explored
+    vertices) AND the frontier is not so narrow that streaming candidate
+    in-edges over-fetches (``n_f * beta > n``).  Both boundary cases are
+    exercised by ``tests/test_policy.py``.
+    """
+    mf = frontier_edges.astype(jnp.float32)
+    mu = unexplored_edges.astype(jnp.float32)
+    nf = frontier_verts.astype(jnp.float32)
+    return (mf * alpha > mu) & (nf * beta > float(n))
 
 
 def bsp_run(
@@ -175,12 +297,17 @@ def blocked_backend_spmv(
     y_init: Optional[jnp.ndarray] = None,
     interpret: Optional[bool] = None,
     compact: bool = False,
+    grid_bucket: Optional[int] = None,
+    assume_fits: bool = False,
 ) -> tuple[jnp.ndarray, IOStats]:
     """Row-exact SpMV through the blocked Pallas kernel + unified IOStats.
 
     ``compact=True`` streams the frontier-compacted (permuted) grid instead
     of the full tile grid — same result bitwise, same IOStats, but skipped
-    tiles cost ~zero grid time (see the module docstring).
+    tiles cost ~zero grid time.  ``grid_bucket`` (static, in tiles) sizes
+    that grid to a pow2 bucket under jit; ``assume_fits=True`` skips the
+    overflow guard for callers that already proved the live tile count
+    fits (see :func:`repro.kernels.spmv.blocked_spmv`).
 
     Tile skipping is block-granular; exactness is restored by masking the
     gather side (push: inactive sources send the additive identity) or the
@@ -191,7 +318,7 @@ def blocked_backend_spmv(
     weighted graphs, where real weights baked into the matmul mass could
     drop a zero/negative-weight edge from the y>0 reachability threshold).
     """
-    from ..kernels.spmv import blocked_spmv, default_interpret
+    from ..kernels.spmv import blocked_spmv, default_interpret, tile_byte_size
 
     bg, active_on, deg = _select_blocked(sg, direction, reverse)
     if bg is None:
@@ -233,7 +360,8 @@ def blocked_backend_spmv(
         xv = jnp.where(mask, xv, jnp.asarray(ident, xv.dtype))
 
     y, stats = blocked_spmv(bg, xv, active, active_on=active_on,
-                            interpret=interpret, compact=compact)
+                            interpret=interpret, compact=compact,
+                            grid_bucket=grid_bucket, assume_fits=assume_fits)
 
     if boolean:
         y = y > 0
@@ -262,15 +390,17 @@ def blocked_backend_spmv(
     requests = jnp.sum(
         jnp.where(has_tiles[:, None], per_block_active, False).astype(jnp.int32)
     )
-    # records: bytes moved expressed in edge-record units (dense tiles move
-    # bd*bs 4-byte slots each, fetched or not sparse).
-    tile_records = (bg.bd * bg.bs * 4) // EDGE_RECORD_BYTES
+    # records/bytes: layout-aware — dense tiles move bd*bs 4-byte f32 slots,
+    # 'bool' occupancy tiles ship as bitmaps (1 bit/slot, 1/32 the bytes).
+    tile_bytes = tile_byte_size(bg)
     st = IOStats(
         requests=requests,
-        records=(stats["tiles_fetched"] * tile_records).astype(jnp.int32),
+        records=(stats["tiles_fetched"]
+                 * (tile_bytes // EDGE_RECORD_BYTES)).astype(jnp.int32),
         chunks_skipped=stats["tiles_skipped"].astype(jnp.int32),
         messages=jnp.sum(jnp.where(active, deg, 0)).astype(jnp.int32),
         supersteps=jnp.zeros((), jnp.int32),
+        bytes_moved=(stats["tiles_fetched"] * tile_bytes).astype(jnp.int32),
     )
     return y, st
 
@@ -286,6 +416,7 @@ def spmv(
     reverse: bool = False,
     backend: str = "scan",
     chunk_cap: Optional[int] = None,
+    interpret: Optional[bool] = None,
 ) -> tuple[jnp.ndarray, IOStats]:
     """Chunked SEM SpMV in the given direction ('out' = push, 'in' = pull).
 
@@ -295,13 +426,17 @@ def spmv(
     'blocked' streams dense Pallas MXU tiles (requires
     ``device_graph(..., blocked=True)``); 'blocked_compact' streams the
     same tiles on the frontier-compacted grid.  ``chunk_cap`` bounds the
-    compact work-list (defaults to the full chunk count, which is always
-    exact but only pays off when callers size it to the expected frontier).
+    compact work-list — for 'compact' in chunks (defaults to the full
+    chunk count), and for 'blocked_compact' in tiles, where it sizes the
+    Pallas grid's pow2 bucket under jit (with an overflow guard, so it is
+    always exact).
     """
     if backend in ("blocked", "blocked_compact"):
+        compact = backend == "blocked_compact"
         return blocked_backend_spmv(
             sg, x, active, sr, direction=direction, reverse=reverse,
-            y_init=y_init, compact=backend == "blocked_compact",
+            y_init=y_init, compact=compact, interpret=interpret,
+            grid_bucket=chunk_cap if compact else None,
         )
     if backend not in ("scan", "compact"):
         raise ValueError(f"unknown backend {backend!r}")
@@ -315,6 +450,245 @@ def spmv(
     return sem_spmv(store, x, active, sr, y_init=y_init, reverse=reverse)
 
 
+# --------------------------------------------------------------------------
+# policy-driven dispatch
+# --------------------------------------------------------------------------
+def _adaptive_compact(store, x, active, sr, y_init, reverse, cap,
+                      n_act_chunks):
+    """lax.switch over pow2 work-list buckets: each superstep runs the
+    smallest compiled compact scan that fits its live-chunk count (the
+    two-level density-adaptive cap of the ROADMAP, chosen from the count
+    computed on-device in the same superstep — no host round-trip, no
+    staleness).  The dispatch already proved ``n_act_chunks <= cap``, so
+    the selected bucket always fits and every branch can assume_fits."""
+    caps = pow2_buckets(cap)
+    idx = bucket_index(n_act_chunks, caps)
+
+    def make(c):
+        def branch(_):
+            return compact_spmv(store, x, active, sr, y_init=y_init,
+                                reverse=reverse, chunk_cap=c,
+                                assume_fits=True)
+        return branch
+
+    return jax.lax.switch(idx, [make(c) for c in caps], None)
+
+
+def _multicast(sg, x, active, sr, *, direction, reverse, y_init, pol):
+    """Dense-vs-compact dispatch within one backend family.
+
+    With ``pol.chunk_cap`` set, live fetch units are counted (chunks or
+    tiles, matching the backend) and a ``lax.cond`` routes the mid-density
+    band through the compacted execution; the dense arm streams the full
+    schedule.  Results are bitwise identical and IOStats field-for-field
+    equal on both arms — compaction changes wall-clock, never accounting.
+    """
+    backend = pol.backend
+    if pol.chunk_cap is None and not (
+        pol.adaptive_cap and backend in ("scan", "compact")
+    ):
+        return spmv(sg, x, active, sr, direction=direction, reverse=reverse,
+                    y_init=y_init, backend=backend, interpret=pol.interpret)
+    if backend in ("blocked", "blocked_compact"):
+        always_compact = backend == "blocked_compact"
+        from ..kernels.spmv import tile_activity
+
+        bg, active_on, _ = _select_blocked(sg, direction, reverse)
+        if bg is None:
+            raise ValueError(
+                "SemGraph has no blocked views; build with "
+                "device_graph(..., blocked=True)"
+            )
+        T = bg.num_tiles
+        cap = max(1, min(int(pol.chunk_cap), T))
+        n_act_tiles = jnp.sum(tile_activity(bg, active, active_on))
+        use_compact = (n_act_tiles <= cap) & (
+            n_act_tiles <= jnp.int32(pol.compact_fraction * T)
+        )
+
+        def compact_arm(_):
+            return blocked_backend_spmv(
+                sg, x, active, sr, direction=direction, reverse=reverse,
+                y_init=y_init, compact=True, interpret=pol.interpret,
+                grid_bucket=cap, assume_fits=True,
+            )
+
+        def dense_arm(_):
+            return blocked_backend_spmv(
+                sg, x, active, sr, direction=direction, reverse=reverse,
+                y_init=y_init, compact=always_compact, interpret=pol.interpret,
+            )
+
+        return jax.lax.cond(use_compact, compact_arm, dense_arm, None)
+
+    if backend not in ("scan", "compact"):
+        raise ValueError(f"unknown backend {backend!r}")
+    store = sg.out_store if direction == "out" else sg.in_store
+    if store is None:
+        raise ValueError(f"SemGraph has no {direction!r} store")
+    C = store.num_chunks
+    cap = C if pol.chunk_cap is None else max(1, min(int(pol.chunk_cap), C))
+    n_act_chunks = jnp.sum(chunk_activity(store, active).astype(jnp.int32))
+    use_compact = (n_act_chunks <= cap) & (
+        n_act_chunks <= jnp.int32(pol.compact_fraction * C)
+    )
+
+    def compact_arm(_):
+        # use_compact already proved the live chunks fit the cap, so skip
+        # compact_spmv's own overflow cond (it would trace a dead full scan).
+        if pol.adaptive_cap:
+            return _adaptive_compact(store, x, active, sr, y_init, reverse,
+                                     cap, n_act_chunks)
+        return compact_spmv(store, x, active, sr, y_init=y_init,
+                            reverse=reverse, chunk_cap=cap, assume_fits=True)
+
+    def dense_arm(_):
+        return sem_spmv(store, x, active, sr, y_init=y_init, reverse=reverse)
+
+    return jax.lax.cond(use_compact, compact_arm, dense_arm, None)
+
+
+def _dispatch(sg, x, active, sr, *, direction, reverse, y_init, pol):
+    """The density three-way (multicast / compact / p2p) for one direction.
+
+    p2p is skipped statically when ``pol.switch_fraction`` is None or the
+    flow is reversed (the p2p gather has no reverse form).
+    """
+    if pol.switch_fraction is None or reverse:
+        return _multicast(sg, x, active, sr, direction=direction,
+                          reverse=reverse, y_init=y_init, pol=pol)
+    deg = sg.out_degree if direction == "out" else sg.in_degree
+    vcap = pol.vcap if pol.vcap is not None else sg.n
+    ecap = pol.ecap if pol.ecap is not None else max(int(sg.m), 1)
+    act_edges = frontier_edge_mass(deg, active)
+    n_act = jnp.sum(active.astype(jnp.int32))
+    use_p2p = (
+        (act_edges <= jnp.int32(pol.switch_fraction * sg.m))
+        & (act_edges <= ecap)
+        & (n_act <= vcap)
+    )
+
+    def sparse(_):
+        return p2p_spmv(
+            sg, x, active, sr, direction=direction, vcap=vcap, ecap=ecap,
+            y_init=y_init,
+        )
+
+    def not_sparse(_):
+        return _multicast(sg, x, active, sr, direction=direction,
+                          reverse=reverse, y_init=y_init, pol=pol)
+
+    return jax.lax.cond(use_p2p, sparse, not_sparse, None)
+
+
+def _pull_available(sg: SemGraph, pol: ExecutionPolicy) -> bool:
+    """Static check: can this graph execute the pull arm under ``pol``?"""
+    if sg.in_degree is None:
+        return False
+    if pol.backend in ("blocked", "blocked_compact"):
+        if sg.out_blocked is None:
+            return False
+    elif sg.in_store is None:
+        return False
+    if pol.switch_fraction is not None and sg.in_indptr is None:
+        return False
+    return True
+
+
+def traverse(
+    sg: SemGraph,
+    x: jnp.ndarray,
+    active: jnp.ndarray,
+    sr: Semiring,
+    *,
+    policy: Optional[ExecutionPolicy] = None,
+    unexplored: Optional[jnp.ndarray] = None,
+    reverse: bool = False,
+    y_init: Optional[jnp.ndarray] = None,
+) -> tuple[jnp.ndarray, IOStats]:
+    """The engine's traversal entry point: one superstep, policy-dispatched.
+
+    Semantics: every edge whose source is in the frontier (``active``,
+    with ``x`` carrying the frontier's per-lane values) contributes
+    ``edge_op(x[src], w)`` combined into ``y[dst]``.
+
+    Without ``unexplored`` this is a plain dispatched SpMV in
+    ``policy.direction`` ('auto' degrades to push): ``active`` is the
+    activity set of that direction's major vertex, exactly like
+    :func:`spmv` — e.g. PageRank-pull passes its activated destinations
+    with ``direction='in'``.
+
+    With ``unexplored`` (a bool[n] candidate-receiver set) the call is a
+    *frontier-expansion* step and the direction becomes an execution
+    choice (paper §4.2: the engine, not the algorithm, owns the I/O
+    decision):
+
+      * push ('out') streams the frontier's out-chunks and scatters;
+      * pull ('in') masks ``x`` to the frontier, streams only the
+        *candidates'* in-chunks, and gathers onto them — rows outside
+        ``unexplored`` keep ``y_init`` (they are exactly the rows a
+        traversal never reads: already-explored vertices);
+      * 'auto' picks per superstep via Beamer's α/β heuristic under a
+        ``lax.cond`` (falling back to push when the graph lacks pull
+        views).
+
+    Accounting: in frontier-expansion mode ``messages`` is normalized to
+    the frontier's logical out-edge mass on every path, so it is
+    execution-invariant (levels AND messages of a direction-optimized BFS
+    are bitwise-equal to static push); requests/records/bytes_moved report
+    the I/O the chosen execution actually did.
+    """
+    pol = policy if policy is not None else ExecutionPolicy()
+    if reverse or unexplored is None:
+        direction = pol.direction if pol.direction in ("out", "in") else "out"
+        return _dispatch(sg, x, active, sr, direction=direction,
+                         reverse=reverse, y_init=y_init, pol=pol)
+
+    mf = frontier_edge_mass(sg.out_degree, active)
+    mode = pol.direction
+    if mode != "out" and not _pull_available(sg, pol):
+        if mode == "in":
+            raise ValueError(
+                "direction='in' needs the graph's pull views (in-store / "
+                "in_degree; blocked backends also need the forward tile "
+                "view) — build the graph with its in-CSR"
+            )
+        mode = "out"  # 'auto' without pull views: push is the only option
+
+    def _push(_):
+        return _dispatch(sg, x, active, sr, direction="out", reverse=False,
+                         y_init=y_init, pol=pol)
+
+    if mode == "out":
+        y, st = _push(None)
+        return y, st._replace(messages=mf)
+
+    # Pull executes the frontier's logical multicast as a gather: x is
+    # masked to the frontier (non-frontier sources contribute the
+    # identity), and only candidate receivers' in-chunks are streamed.
+    mask = active.reshape((-1,) + (1,) * (x.ndim - 1))
+    xm = jnp.where(mask, x, jnp.asarray(sr.identity, x.dtype))
+
+    def _pull(_):
+        return _dispatch(sg, xm, unexplored, sr, direction="in",
+                         reverse=False, y_init=y_init, pol=pol)
+
+    if mode == "in":
+        y, st = _pull(None)
+        return y, st._replace(messages=mf)
+
+    use_pull = beamer_use_pull(
+        mf,
+        frontier_edge_mass(sg.out_degree, unexplored),
+        jnp.sum(active.astype(jnp.int32)),
+        sg.n,
+        alpha=pol.alpha,
+        beta=pol.beta,
+    )
+    y, st = jax.lax.cond(use_pull, _pull, _push, None)
+    return y, st._replace(messages=mf)
+
+
 def hybrid_spmv(
     sg: SemGraph,
     x: jnp.ndarray,
@@ -322,80 +696,42 @@ def hybrid_spmv(
     sr: Semiring,
     *,
     direction: str = "out",
-    vcap: int,
-    ecap: int,
+    vcap: Optional[int] = None,
+    ecap: Optional[int] = None,
     switch_fraction: float = 0.10,
     y_init: Optional[jnp.ndarray] = None,
     backend: str = "scan",
     chunk_cap: Optional[int] = None,
     compact_fraction: float = 0.5,
+    policy: Optional[ExecutionPolicy] = None,
+    unexplored: Optional[jnp.ndarray] = None,
 ) -> tuple[jnp.ndarray, IOStats]:
-    """Density-driven multicast / compact-scan / point-to-point dispatch.
+    """Density-driven multicast / compact / point-to-point dispatch.
 
-    The paper (§4.2) switches a vertex to point-to-point messaging once it
-    retains ~10% of its original degree; the SPMD adaptation switches the
-    whole *superstep* by frontier density.  With ``chunk_cap`` set the
-    dispatch is three-way (see the module docstring's cost model):
-
-      * **sparse** — edge mass <= ``switch_fraction``·m and the static
-        ``vcap``/``ecap`` gather capacities fit: row-exact point-to-point
-        fetches (O(ecap), minimal bytes).
-      * **mid** — live chunks fit ``chunk_cap`` AND are at most
-        ``compact_fraction`` of all chunks: the compact scan
-        (O(chunk_cap·S) work — past ``compact_fraction`` the compaction
-        gather costs more than the steps it saves).
-      * **dense** — everything else: full multicast via ``backend``
-        ('scan' chunks or 'blocked'/'blocked_compact' Pallas tiles),
-        O(C·S) but best per-edge throughput.
+    Pre-policy entry point, kept for compatibility: the loose kwargs are
+    folded into an :class:`ExecutionPolicy` and handed to
+    :func:`traverse`.  New code should build the policy directly (and get
+    direction optimization by setting ``direction='auto'`` and passing
+    ``unexplored``).
 
     ``chunk_cap=None`` (default) preserves the historical two-way
-    multicast/p2p switch.  Every path reports IOStats in identical units,
-    and all paths agree with :func:`flat_spmv` on the result.
+    multicast/p2p switch; with it set the dispatch is three-way (see the
+    module docstring's cost model).  Every path reports IOStats in
+    identical units, and all paths agree with :func:`flat_spmv` on the
+    result.
     """
-    deg = sg.out_degree if direction == "out" else sg.in_degree
-    act_edges = jnp.sum(jnp.where(active, deg, 0))
-    n_act = jnp.sum(active.astype(jnp.int32))
-    use_p2p = (
-        (act_edges <= jnp.int32(switch_fraction * sg.m))
-        & (act_edges <= ecap)
-        & (n_act <= vcap)
-    )
-
-    def dense(_):
-        return spmv(
-            sg, x, active, sr, direction=direction, y_init=y_init,
+    if policy is None:
+        policy = ExecutionPolicy(
             backend=backend,
+            direction=direction,
+            chunk_cap=chunk_cap,
+            vcap=vcap,
+            ecap=ecap,
+            switch_fraction=switch_fraction,
+            compact_fraction=compact_fraction,
         )
-
-    def sparse(_):
-        return p2p_spmv(
-            sg, x, active, sr, direction=direction, vcap=vcap, ecap=ecap, y_init=y_init
-        )
-
-    if chunk_cap is None:
-        return jax.lax.cond(use_p2p, sparse, dense, None)
-
-    store = sg.out_store if direction == "out" else sg.in_store
-    if store is None:
-        raise ValueError(f"SemGraph has no {direction!r} store")
-    cap = max(1, min(int(chunk_cap), store.num_chunks))
-    n_act_chunks = jnp.sum(chunk_activity(store, active).astype(jnp.int32))
-    use_compact = (n_act_chunks <= cap) & (
-        n_act_chunks <= jnp.int32(compact_fraction * store.num_chunks)
-    )
-
-    def compact(_):
-        # use_compact already proved the live chunks fit the cap, so skip
-        # compact_spmv's own overflow cond (it would trace a dead full scan).
-        return compact_spmv(
-            store, x, active, sr, y_init=y_init, chunk_cap=cap,
-            assume_fits=True,
-        )
-
-    def not_sparse(_):
-        return jax.lax.cond(use_compact, compact, dense, None)
-
-    return jax.lax.cond(use_p2p, sparse, not_sparse, None)
+    return traverse(sg, x, active, sr, policy=policy, unexplored=unexplored,
+                    y_init=y_init)
 
 
 def flat_spmv(

@@ -40,11 +40,14 @@ __all__ = [
     "IOStats",
     "EdgeChunkStore",
     "SemGraph",
+    "bucket_index",
     "build_store",
     "chunk_activity",
     "compact_spmv",
     "device_graph",
+    "frontier_edge_mass",
     "pad_state",
+    "pow2_buckets",
     "sem_spmv",
     "p2p_spmv",
 ]
@@ -53,8 +56,14 @@ __all__ = [
 EDGE_RECORD_BYTES = 8
 
 
+def _store_record_bytes(w) -> int:
+    """On-disk bytes per edge record for a store/row layout: 8 for the
+    (major, minor) int32 pair, +4 when a float32 weight rides along."""
+    return EDGE_RECORD_BYTES + (4 if w is not None else 0)
+
+
 class IOStats(NamedTuple):
-    """I/O accounting, in *records* (multiply by record bytes to get bytes).
+    """I/O accounting, in *records* plus layout-aware real bytes.
 
     requests: per-vertex edge-list I/O requests issued — FlashGraph/SAFS
       issues one request per active vertex row; the page cache then
@@ -64,6 +73,17 @@ class IOStats(NamedTuple):
     chunks_skipped: chunks whose fetch was elided by activity skipping.
     messages: edge contributions combined (the paper's message count).
     supersteps: BSP iterations executed.
+    bytes_moved: bytes actually transferred, charged by each path's real
+      layout — 8 B/record for unweighted chunk/row fetches, 12 B/record
+      for weighted stores, 4 B/slot for dense f32 tiles, and 1 bit/slot
+      for ``bool`` occupancy tiles (shipped as bitmaps).  This is what
+      makes the SEM-vs-in-memory claim a *bytes* claim, not a slot count.
+
+    All counters are int32 (JAX's default integer without x64), so each
+    wraps at 2^31 of its unit — ~2 GiB for ``bytes_moved``, ~2.1e9 edge
+    contributions for ``messages``.  Ample for the bench/CI workloads;
+    paper-scale runs that could exceed a counter should drain per-superstep
+    deltas host-side instead of accumulating one IOStats across the run.
     """
 
     requests: jnp.ndarray
@@ -71,18 +91,21 @@ class IOStats(NamedTuple):
     chunks_skipped: jnp.ndarray
     messages: jnp.ndarray
     supersteps: jnp.ndarray
+    bytes_moved: jnp.ndarray
 
     @staticmethod
     def zero() -> "IOStats":
         z = jnp.zeros((), dtype=jnp.int32)
-        return IOStats(z, z, z, z, z)
+        return IOStats(z, z, z, z, z, z)
 
     def __add__(self, other: "IOStats") -> "IOStats":  # type: ignore[override]
         return IOStats(*(a + b for a, b in zip(self, other)))
 
-    def bytes(self, weighted: bool = False) -> int:
-        rec = EDGE_RECORD_BYTES + (4 if weighted else 0)
-        return int(self.records) * rec
+    def bytes(self, weighted: Optional[bool] = None) -> int:
+        """Layout-aware bytes moved.  ``weighted`` is deprecated and
+        ignored — each execution path now charges its own record layout
+        into ``bytes_moved`` at the point of transfer."""
+        return int(self.bytes_moved)
 
 
 @jax.tree_util.register_dataclass
@@ -272,13 +295,50 @@ def _active_prefix(active: jnp.ndarray) -> jnp.ndarray:
 def chunk_activity(store: EdgeChunkStore, active: jnp.ndarray) -> jnp.ndarray:
     """bool[C]: which chunks the frontier would fetch.
 
-    Used by fused-phase algorithms (betweenness §4.4) to account for chunk
-    fetches *shared* between concurrent phases — the analogue of FlashGraph
-    page-cache hits when multiple searches touch the same page in one
-    superstep.
+    Works identically on push (sorted_by='src') and pull (sorted_by='dst')
+    stores — the activity vector is always over the store's *major* vertex,
+    so the engine's direction-optimizing dispatch calls this with the
+    frontier for the push store and with the unexplored/candidate set for
+    the pull store.  Also used by fused-phase algorithms (betweenness §4.4)
+    to account for chunk fetches *shared* between concurrent phases — the
+    analogue of FlashGraph page-cache hits when multiple searches touch the
+    same page in one superstep.
     """
     prefix = _active_prefix(active)
     return (prefix[store.hi + 1] - prefix[store.lo]) > 0
+
+
+def frontier_edge_mass(degree: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
+    """int32 scalar: total degree over the active set.
+
+    The quantity both switch heuristics key on — Beamer's push/pull flip
+    compares the frontier's out-edge mass against the unexplored mass, and
+    the p2p switch compares it against ``switch_fraction * m``.
+    """
+    return jnp.sum(jnp.where(active, degree, 0)).astype(jnp.int32)
+
+
+def pow2_buckets(cap: int) -> tuple:
+    """(1, 2, 4, ..., cap): the compiled work-list capacities.
+
+    Only ``log2(cap) + 1`` distinct sizes exist, so tracing one compact
+    scan per bucket is cheap while a draining frontier runs on the
+    smallest bucket that fits it.
+    """
+    out, c = [], 1
+    while c < cap:
+        out.append(c)
+        c *= 2
+    out.append(int(max(1, cap)))
+    return tuple(out)
+
+
+def bucket_index(count: jnp.ndarray, buckets: tuple) -> jnp.ndarray:
+    """Index of the smallest bucket >= ``count`` (device-side, no host
+    round-trip — this is what lets the engine pick a pow2 work-list size
+    per superstep inside a jitted BSP loop via ``lax.switch``)."""
+    edges = jnp.asarray(buckets[:-1], jnp.int32)
+    return jnp.sum((count > edges).astype(jnp.int32))
 
 
 def _make_fetch(sr, xp, active, n, gather_on_major, has_w):
@@ -356,6 +416,7 @@ def sem_spmv(
     y0 = _pad_y_init(sr, xp, y_init, n)
     gather_on_major = (store.sorted_by == "src") != reverse
     has_w = store.w is not None
+    rec_bytes = _store_record_bytes(store.w)
     fetch = _make_fetch(sr, xp, active, n, gather_on_major, has_w)
 
     def body(carry, chunk):
@@ -373,6 +434,7 @@ def sem_spmv(
                 chunks_skipped=st.chunks_skipped,
                 messages=st.messages + msgs,
                 supersteps=st.supersteps,
+                bytes_moved=st.bytes_moved + store.chunk_size * rec_bytes,
             )
             return y, st
 
@@ -464,6 +526,8 @@ def compact_spmv(
             chunks_skipped=C - n_act_chunks,
             messages=msgs,
             supersteps=jnp.zeros((), jnp.int32),
+            bytes_moved=n_act_chunks * store.chunk_size
+            * _store_record_bytes(store.w),
         )
         return y[:n], st
 
@@ -545,5 +609,6 @@ def p2p_spmv(
         chunks_skipped=jnp.zeros((), jnp.int32),
         messages=total_edges.astype(jnp.int32),
         supersteps=jnp.zeros((), jnp.int32),
+        bytes_moved=(total_edges * _store_record_bytes(w)).astype(jnp.int32),
     )
     return y[:n], st

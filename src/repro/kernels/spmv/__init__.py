@@ -6,6 +6,7 @@ from .ops import (
     compact_tile_order,
     default_interpret,
     tile_activity,
+    tile_byte_size,
 )
 from .ref import blocked_spmv_ref
 
@@ -18,4 +19,5 @@ __all__ = [
     "compact_tile_order",
     "default_interpret",
     "tile_activity",
+    "tile_byte_size",
 ]

@@ -41,6 +41,7 @@ __all__ = [
     "compact_tile_order",
     "default_interpret",
     "tile_activity",
+    "tile_byte_size",
 ]
 
 
@@ -271,6 +272,15 @@ def tile_activity(
     raise ValueError(f"active_on must be 'src' or 'dst', got {active_on!r}")
 
 
+def tile_byte_size(bg: BlockedGraph) -> int:
+    """Bytes one tile actually ships: dense f32 slots for the numeric
+    semirings, a 1-bit-per-slot bitmap for 'bool' occupancy tiles (which
+    carry no magnitudes, so 4 bytes/slot would overcharge them 32x)."""
+    if bg.semiring == "bool":
+        return (bg.bd * bg.bs) // 8
+    return bg.bd * bg.bs * 4
+
+
 def blocked_spmv(
     bg: BlockedGraph,
     x: jnp.ndarray,
@@ -279,6 +289,8 @@ def blocked_spmv(
     active_on: str = "src",
     interpret: bool = True,
     compact: bool = False,
+    grid_bucket: Optional[int] = None,
+    assume_fits: bool = False,
 ) -> tuple[jnp.ndarray, dict]:
     """y = A (.) x over the blocked tiles, with frontier tile skipping.
 
@@ -299,10 +311,22 @@ def blocked_spmv(
         to the next power of two over the live count — size-bucketed so at
         most log2(T) kernel variants ever compile.  Results are bitwise
         identical to the full grid (same tiles, same order).
+      grid_bucket: static work-list capacity (in tiles) for the compacted
+        grid *under jit*, where the live count is traced and the grid
+        would otherwise stay at full T capacity.  The grid shrinks to the
+        pow2 bucket over this cap; if the live count overflows it, a
+        ``lax.cond`` falls back to the full-capacity grid, so the result
+        is always exact.  This is how the engine's
+        :class:`~repro.core.engine.ExecutionPolicy` sizes the Pallas grid
+        from its ``chunk_cap``.
+      assume_fits: elide that overflow guard — ONLY for callers that
+        already proved the live tile count fits ``grid_bucket`` (the
+        engine's dispatch tests exactly that before routing here).
 
     Returns:
       (y [n] or [n, K] f32, stats) — stats counts fetched/skipped tiles,
-      tile bytes moved, and the edge records resident in fetched tiles
+      tile bytes moved (layout-aware: f32 slots, or 1/32 of that for
+      'bool' bitmap tiles), and the edge records resident in fetched tiles
       (``messages`` — block-granular, so >= the row-exact count), the
       kernel-path analogue of ``core.sem.IOStats``.  Identical across the
       full and compacted grids.
@@ -327,14 +351,33 @@ def blocked_spmv(
         perm, dbid_p, sbid_p, first_p, last_p, nact = compact_tile_order(
             bg, act_tile
         )
-        if isinstance(nact, jax.core.Tracer):
-            G = bg.num_tiles  # traced frontier: full-capacity grid, tail no-ops
+        T = bg.num_tiles
+
+        def _run_grid(G):
+            return _compact_spmv_jit(
+                bg, x_blocks, perm[:G], dbid_p[:G], sbid_p[:G], first_p[:G],
+                last_p[:G], jnp.reshape(nact, (1,)), interpret,
+            )
+
+        if not isinstance(nact, jax.core.Tracer):
+            # concrete frontier: exact pow2 bucket over the live count.
+            y_blocks = _run_grid(compact_grid_size(T, int(nact)))
+        elif grid_bucket is None:
+            # traced frontier, no cap: full-capacity grid, tail no-ops.
+            y_blocks = _run_grid(T)
         else:
-            G = compact_grid_size(bg.num_tiles, int(nact))
-        y_blocks = _compact_spmv_jit(
-            bg, x_blocks, perm[:G], dbid_p[:G], sbid_p[:G], first_p[:G],
-            last_p[:G], jnp.reshape(nact, (1,)), interpret,
-        )
+            G = compact_grid_size(T, min(int(grid_bucket), T))
+            if assume_fits or G >= T:
+                y_blocks = _run_grid(G)
+            else:
+                # the bucket is a hint, not a guarantee: overflow falls
+                # back to the full-capacity grid (bitwise-identical).
+                y_blocks = jax.lax.cond(
+                    nact <= G,
+                    lambda _: _run_grid(G),
+                    lambda _: _run_grid(T),
+                    None,
+                )
         # Blocks with no LIVE tile are never flushed (the compacted grid
         # never visits them) — fill with the accumulate identity, exactly
         # what the full grid's zeroed-then-flushed accumulator yields.
@@ -358,7 +401,7 @@ def blocked_spmv(
     stats = {
         "tiles_fetched": fetched,
         "tiles_skipped": bg.num_tiles - fetched,
-        "tile_bytes": fetched * bd * bs * 4,
+        "tile_bytes": fetched * tile_byte_size(bg),
         "messages": jnp.sum(bg.nnz * act_tile),
     }
     return y, stats
