@@ -1,0 +1,157 @@
+"""Façade overhead: ``repro.Graph`` methods vs direct ``traverse()`` loops.
+
+The façade's contract is that it adds *organization*, not execution: a
+``Graph.<alg>()`` call routes through ``run_program`` on cached device
+views and must compile to the same XLA as the pre-façade hand-rolled BSP
+loop driving :func:`repro.core.traverse` directly.  This bench pins that
+down two ways:
+
+  * ``facade_over_direct_x`` — jitted wall-clock ratio of the façade call
+    to a hand-written superstep loop (the pre-program PageRank-push /
+    multi-source-BFS implementations, kept here verbatim as baselines).
+    The claim gate is <2% overhead.
+  * ``parity_ok`` — the façade's values, IOStats, and superstep counts are
+    bitwise-equal to the direct loops' (1.0 = every field matched).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro
+from repro.algs import UNREACHED
+from repro.core import ExecutionPolicy, IOStats, bsp_run, traverse
+from repro.core.semiring import OR_AND, PLUS_TIMES
+
+from .common import bench_graph, row, timeit
+
+
+# ---- the pre-façade hand-rolled loops, pinned as overhead baselines ----
+class _PRState(NamedTuple):
+    rank: jnp.ndarray
+    aux: jnp.ndarray
+    active: jnp.ndarray
+    io: IOStats
+
+
+def _direct_pagerank_push(sg, *, damping=0.85, tol=1e-3, max_iters=100,
+                          policy: ExecutionPolicy):
+    n = sg.n
+    base = (1.0 - damping) / n
+    thresh = tol / n
+    pol = policy.with_(direction="out")
+    if pol.vcap is None:
+        pol = pol.with_(vcap=n)
+    if pol.ecap is None:
+        pol = pol.with_(ecap=max(4096, sg.m // 8))
+    deg = jnp.maximum(sg.out_degree, 1)
+
+    def step(s):
+        send = jnp.where(s.active, s.aux, 0.0)
+        x = damping * jnp.where(sg.out_degree > 0, send / deg, 0.0)
+        recv, io = traverse(sg, x, s.active, PLUS_TIMES, policy=pol)
+        rank = s.rank + recv
+        pending = (s.aux - send) + recv
+        active = jnp.abs(pending) > thresh
+        io = io._replace(supersteps=io.supersteps + 1)
+        return _PRState(rank, pending, active, s.io + io), ~jnp.any(active)
+
+    def wrapped(carry):
+        s, _ = carry
+        s, done = step(s)
+        return (s, done), done
+
+    s0 = _PRState(jnp.full(n, base), jnp.full(n, base), jnp.ones(n, bool),
+                  IOStats.zero())
+    (s, _), iters = bsp_run(wrapped, (s0, jnp.zeros((), bool)), max_iters)
+    return s.rank, s.io, iters
+
+
+class _BFSState(NamedTuple):
+    reached: jnp.ndarray
+    frontier: jnp.ndarray
+    dist: jnp.ndarray
+    level: jnp.ndarray
+    io: IOStats
+
+
+def _direct_bfs(sg, sources, *, policy: ExecutionPolicy):
+    n = sg.n
+    sources = jnp.asarray(sources, jnp.int32)
+    K = sources.shape[0]
+    reached0 = jnp.zeros((n, K), bool).at[sources, jnp.arange(K)].set(True)
+    dist0 = jnp.full((n, K), UNREACHED, jnp.int32).at[
+        sources, jnp.arange(K)].set(0)
+
+    def step(s):
+        active = jnp.any(s.frontier, axis=1)
+        unexplored = ~jnp.all(s.reached, axis=1)
+        nxt, st = traverse(sg, s.frontier, active, OR_AND, policy=policy,
+                           unexplored=unexplored)
+        newly = nxt & ~s.reached
+        reached = s.reached | newly
+        dist = jnp.where(newly, s.level + 1, s.dist)
+        io = (s.io + st)._replace(supersteps=s.io.supersteps + 1)
+        return _BFSState(reached, newly, dist, s.level + 1, io), ~jnp.any(newly)
+
+    def wrapped(carry):
+        s, _ = carry
+        s, done = step(s)
+        return (s, done), done
+
+    s0 = _BFSState(reached0, reached0, dist0, jnp.zeros((), jnp.int32),
+                   IOStats.zero())
+    (s, _), iters = bsp_run(wrapped, (s0, jnp.zeros((), bool)), n + 1)
+    return s.dist, s.io, iters
+
+
+def _io_equal(a, b) -> bool:
+    return all(int(x) == int(y) for x, y in zip(a, b))
+
+
+def run(quick: bool = True) -> list:
+    scale = 10 if quick else 13
+    repeats = 7 if quick else 5
+    g = bench_graph(scale, 16)
+    session = repro.Graph(g, chunk_size=2048)
+    sem = session.device()  # the same cached view the façade runs on
+    pol = ExecutionPolicy(backend="compact",
+                          chunk_cap=sem.out_store.num_chunks)
+    rows = []
+    parity = True
+
+    # ---- PageRank-push: façade vs direct loop ----
+    facade = jax.jit(lambda: session.pagerank(tol=1e-4, policy=pol))
+    direct = jax.jit(
+        lambda: _direct_pagerank_push(sem, tol=1e-4, policy=pol))
+    res_f, t_f = timeit(facade, repeats=repeats)
+    (r_d, io_d, it_d), t_d = timeit(direct, repeats=repeats)
+    parity &= bool((np.asarray(res_f.values) == np.asarray(r_d)).all())
+    parity &= _io_equal(res_f.iostats, io_d)
+    parity &= int(res_f.supersteps) == int(it_d)
+    rows += [
+        row("api", "pagerank_facade", "runtime_s", t_f),
+        row("api", "pagerank_direct", "runtime_s", t_d),
+        row("api", "pagerank", "facade_over_direct_x", t_f / t_d),
+    ]
+
+    # ---- multi-source BFS: façade vs direct loop ----
+    src = jnp.asarray([0, 7, 42, 99], jnp.int32)
+    bpol = pol.with_(switch_fraction=None)
+    facade_b = jax.jit(lambda: session.bfs(src, policy=bpol))
+    direct_b = jax.jit(lambda: _direct_bfs(sem, src, policy=bpol))
+    res_fb, t_fb = timeit(facade_b, repeats=repeats)
+    (d_d, bio_d, bit_d), t_db = timeit(direct_b, repeats=repeats)
+    parity &= bool((np.asarray(res_fb.values) == np.asarray(d_d)).all())
+    parity &= _io_equal(res_fb.iostats, bio_d)
+    parity &= int(res_fb.supersteps) == int(bit_d)
+    rows += [
+        row("api", "bfs_facade", "runtime_s", t_fb),
+        row("api", "bfs_direct", "runtime_s", t_db),
+        row("api", "bfs", "facade_over_direct_x", t_fb / t_db),
+    ]
+    rows.append(row("api", "facade", "parity_ok", 1.0 if parity else 0.0))
+    return rows

@@ -32,6 +32,7 @@ import traceback
 from .common import print_rows, row
 
 BENCHES = [
+    "bench_api",
     "bench_pagerank",
     "bench_coreness",
     "bench_diameter",
@@ -49,6 +50,10 @@ BENCHES = [
 # 1.5B-edge Twitter on an SSD array); EXPERIMENTS.md §Benchmarks discusses
 # each gap.  Direction must always match the paper.
 CLAIMS = [
+    ("api", "pagerank", "facade_over_direct_x", lambda v: v < 1.02,
+     "Graph facade adds <2% overhead over direct traverse() loops"),
+    ("api", "facade", "parity_ok", lambda v: v == 1.0,
+     "Graph facade is bitwise-equal (values+IOStats) to direct loops"),
     ("pagerank", "push_over_pull", "read_reduction_x", lambda v: v > 1.2,
      "Fig.2: push reads less than pull (paper: 1.8x)"),
     ("pagerank", "push_over_pull", "request_reduction_x", lambda v: v > 1.3,
@@ -105,13 +110,23 @@ def smoke(json_out: str | None = None) -> int:
     """Seconds-fast blocked-backend + compaction exercise (see docstring),
     plus a mini direction sweep: push/pull/adaptive BFS must agree on
     levels AND messages (noise-free correctness gate), with the per-mode
-    runtime/byte rows recorded for the perf-trajectory artifact."""
+    runtime/byte rows recorded for the perf-trajectory artifact.
+
+    Everything runs through the ``repro.Graph`` façade, gated on parity
+    with the legacy entry points: per backend, values AND IOStats of the
+    façade call must be bitwise-equal to ``pagerank_push``/``bfs_multi``
+    on a freshly built device graph — the CI guard that the façade, the
+    program runner, and the session view cache stay wired to the same
+    engine the shims use."""
+    import warnings
+
     import jax
     import jax.numpy as jnp
     import numpy as np
 
+    import repro
     from repro.algs import bfs_multi, pagerank_push
-    from repro.core import device_graph
+    from repro.core import ExecutionPolicy, device_graph
     from repro.graph.generators import path_graph, rmat
 
     from . import bench_density, bench_direction
@@ -119,25 +134,42 @@ def smoke(json_out: str | None = None) -> int:
 
     t0 = time.time()
     g = rmat(7, edge_factor=8, seed=2)
+    session = repro.Graph(g, chunk_size=256, bd=32, bs=32)
     sg = device_graph(g, chunk_size=256, blocked=True, bd=32, bs=32)
     rows = []
     results = {}
+    facade_ok = True
     for backend in ("scan", "compact", "blocked", "blocked_compact"):
-        fn = jax.jit(lambda b=backend: pagerank_push(sg, tol=1e-4, backend=b,
-                                                     chunk_cap=2))
-        (r, io, it), t = timeit(fn, repeats=1)
-        results[backend] = np.asarray(r)
+        pol = ExecutionPolicy(backend=backend, chunk_cap=2)
+        fn = jax.jit(lambda p=pol: session.pagerank(tol=1e-4, policy=p))
+        res, t = timeit(fn, repeats=1)
+        results[backend] = np.asarray(res.values)
         rows += [
             row("smoke", f"push_{backend}", "runtime_s", t),
             row("smoke", f"push_{backend}", "fetches_skipped",
-                int(io.chunks_skipped)),
+                int(res.iostats.chunks_skipped)),
         ]
         src = jnp.asarray([0, 5, 17, 99], jnp.int32)
-        (d, bio, _), tb = timeit(
-            jax.jit(lambda b=backend: bfs_multi(sg, src, backend=b)), repeats=1
+        bpol = ExecutionPolicy(backend=backend, switch_fraction=None)
+        bres, tb = timeit(
+            jax.jit(lambda p=bpol: session.bfs(src, policy=p)), repeats=1
         )
-        results[f"bfs_{backend}"] = np.asarray(d)
+        results[f"bfs_{backend}"] = np.asarray(bres.values)
         rows.append(row("smoke", f"bfs4_{backend}", "runtime_s", tb))
+        # façade-vs-legacy parity gate (values AND the full IOStats ledger).
+        # Both sides jitted: jit-vs-eager float rounding is not the façade's
+        # doing, and jit-vs-jit of identical programs IS bitwise.
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            r_l, io_l, it_l = jax.jit(
+                lambda p=pol: pagerank_push(sg, tol=1e-4, policy=p))()
+            d_l, bio_l, _ = jax.jit(
+                lambda p=bpol: bfs_multi(sg, src, policy=p))()
+        facade_ok &= bool((np.asarray(r_l) == results[backend]).all())
+        facade_ok &= bool((np.asarray(d_l) == results[f"bfs_{backend}"]).all())
+        facade_ok &= all(int(a) == int(b) for a, b in zip(io_l, res.iostats))
+        facade_ok &= all(int(a) == int(b) for a, b in zip(bio_l, bres.iostats))
+        facade_ok &= int(it_l) == int(res.supersteps)
     err = max(
         float(np.max(np.abs(results["scan"] - results[b])))
         for b in ("compact", "blocked", "blocked_compact")
@@ -147,6 +179,7 @@ def smoke(json_out: str | None = None) -> int:
         for b in ("compact", "blocked", "blocked_compact")
     )
     rows.append(row("smoke", "backends", "pagerank_maxerr", err))
+    rows.append(row("smoke", "facade", "parity_ok", 1.0 if facade_ok else 0.0))
 
     # mini frontier-density sweep: compact wall-clock must track density.
     gd = rmat(10, edge_factor=8, seed=42)
@@ -178,11 +211,12 @@ def smoke(json_out: str | None = None) -> int:
     dir_ok = all(agree == 1.0 for _, agree in ratios.values())
 
     print_rows(rows)
-    ok = err < 1e-5 and bfs_ok and dens_ok and dir_ok
+    ok = err < 1e-5 and bfs_ok and dens_ok and dir_ok and facade_ok
     print(f"# smoke {'PASS' if ok else 'FAIL'} in {time.time() - t0:.1f}s "
           f"(pagerank maxerr {err:.2g}, bfs equal {bfs_ok}, "
           f"compact sparse speedup {dens_speedup:.1f}x, "
-          f"direction modes agree {dir_ok})")
+          f"direction modes agree {dir_ok}, "
+          f"facade parity {facade_ok})")
     if json_out:
         _write_json(json_out, rows, ok=ok, mode="smoke")
     return 0 if ok else 1

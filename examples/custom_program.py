@@ -1,0 +1,86 @@
+"""A user-defined algorithm in ~30 lines: weakly connected components.
+
+    PYTHONPATH=src python examples/custom_program.py
+
+This file is the extensibility proof for the ``VertexProgram`` API: it is
+written ONLY against the public surface (``repro.Graph``,
+``repro.VertexProgram``, ``repro.ExecutionPolicy``, the exported
+semirings) — no engine internals — yet inherits everything the built-in
+algorithms get: chunk-skipping SEM I/O accounting, the
+multicast/compact/p2p density dispatch, blocked Pallas backends, and the
+shared BSP driver.
+
+The algorithm is label propagation over the min semiring: every vertex
+starts with its own id as label; active vertices multicast their label
+along out-edges; a vertex adopting a smaller label activates.  On a
+symmetrized graph the fixed point labels each weakly connected component
+by its smallest member.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+import repro
+from repro.core import MIN_PLUS
+
+
+class WCCState(NamedTuple):
+    labels: jnp.ndarray  # f32[n] current component label
+    active: jnp.ndarray  # bool[n] changed last superstep
+
+
+class WCCProgram(repro.VertexProgram):
+    """Weakly connected components by min-label propagation."""
+
+    semiring = MIN_PLUS  # y[dst] = min(y[dst], x[src]) on unweighted edges
+
+    def init(self, sg, seeds) -> WCCState:
+        return WCCState(labels=jnp.arange(sg.n, dtype=jnp.float32),
+                        active=jnp.ones(sg.n, bool))
+
+    def frontier(self, sg, s: WCCState) -> repro.Frontier:
+        return repro.Frontier(x=s.labels, active=s.active)
+
+    def apply(self, sg, s: WCCState, gathered):
+        labels = jnp.minimum(s.labels, gathered)
+        changed = labels < s.labels
+        return WCCState(labels, changed), changed
+
+    def finalize(self, sg, s: WCCState) -> jnp.ndarray:
+        return s.labels.astype(jnp.int32)
+
+
+def main() -> int:
+    rng = np.random.default_rng(0)
+    # Three ring components of very different sizes.
+    comps, src, dst = [900, 90, 10], [], []
+    base = 0
+    for size in comps:
+        v = base + np.arange(size)
+        src.append(v), dst.append(base + (np.arange(size) + 1) % size)
+        base += size
+    g = repro.Graph.from_edges(np.concatenate(src), np.concatenate(dst),
+                               symmetrize=True, chunk_size=256)
+
+    policy = repro.ExecutionPolicy(backend="compact", chunk_cap=8,
+                                   adaptive_cap=True)
+    res = g.run(WCCProgram(), policy=policy)
+
+    labels = np.asarray(res.values)
+    sizes = np.sort(np.unique(labels, return_counts=True)[1])[::-1]
+    print(f"graph: n={g.n} m={g.m}")
+    print(f"components: {len(sizes)} (sizes {sizes.tolist()}) "
+          f"in {int(res.supersteps)} supersteps")
+    print(f"I/O: {res.iostats.bytes() / 1e6:.2f} MB moved, "
+          f"{int(res.iostats.chunks_skipped)} chunk fetches skipped")
+    assert sizes.tolist() == sorted(comps, reverse=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,11 +1,13 @@
 """The paper's scenario end-to-end: run the whole Graphyti library over one
-SEM graph and report the per-algorithm I/O ledger.
+``repro.Graph`` session and report the per-algorithm I/O ledger.
 
 One :class:`~repro.core.ExecutionPolicy` drives every algorithm's engine
 dispatch — direction='auto' gives the traversals (diameter's BFS sweeps,
 betweenness forward) Beamer-style push↔pull switching, chunk_cap +
 adaptive_cap keep draining frontiers on pow2-bucketed compact work-lists,
-and the p2p arm takes the sparse tails.
+and the p2p arm takes the sparse tails.  The session builds its SEM view
+once; every method reuses it and returns the same ``ProgramResult`` shape,
+so the ledger below is one loop over uniform results.
 
     PYTHONPATH=src python examples/graph_analytics.py [--scale 11]
 """
@@ -15,18 +17,9 @@ import time
 
 sys.path.insert(0, "src")
 
-import jax
 import numpy as np
 
-from repro.algs import (
-    bc_fused,
-    coreness,
-    count_triangles,
-    diameter_multisource,
-    louvain,
-    pagerank_push,
-)
-from repro.core import ExecutionPolicy, device_graph
+import repro
 from repro.graph.generators import rmat
 
 
@@ -35,14 +28,14 @@ def main() -> int:
     ap.add_argument("--scale", type=int, default=10)
     args = ap.parse_args()
 
-    g = rmat(args.scale, edge_factor=8, seed=3, symmetrize=True)
-    sg = device_graph(g, chunk_size=2048)
+    g = repro.Graph(rmat(args.scale, edge_factor=8, seed=3, symmetrize=True),
+                    chunk_size=2048)
     # One policy object replaces the per-algorithm knob sprawl: the engine
     # owns direction, density dispatch, and work-list sizing (paper §4.2).
-    policy = ExecutionPolicy(
+    policy = repro.ExecutionPolicy(
         direction="auto",                 # Beamer push<->pull per superstep
         backend="compact",                # frontier-compacted chunk scans
-        chunk_cap=sg.out_store.num_chunks,
+        chunk_cap=max(1, -(-g.m // 2048)),
         adaptive_cap=True,                # pow2 work-list re-bucketing
         switch_fraction=0.10,             # p2p on the sparse tail
         vcap=max(64, g.n // 4),
@@ -51,47 +44,42 @@ def main() -> int:
     print(f"graph: n={g.n} m={g.m} | policy: {policy.direction}/"
           f"{policy.backend} | ledger: MB read / requests / supersteps")
 
-    ledger = []
-
-    def record(name, io, steps, t):
-        mb = io.bytes() / 1e6  # layout-aware bytes, not slot counts
-        ledger.append((name, mb, int(io.requests), int(steps), t))
-        print(f"  {name:12s} {mb:9.2f} MB {int(io.requests):9d} req "
-              f"{int(steps):5d} steps {t:7.2f}s")
+    def record(name, res, t):
+        mb = res.iostats.bytes() / 1e6  # layout-aware bytes, not slot counts
+        print(f"  {name:12s} {mb:9.2f} MB {int(res.iostats.requests):9d} req "
+              f"{int(res.supersteps):5d} steps {t:7.2f}s")
 
     t0 = time.time()
-    ranks, io, steps = jax.jit(lambda: pagerank_push(sg, policy=policy))()
-    record("pagerank", io, steps, time.time() - t0)
+    pr = g.pagerank(policy=policy)
+    record("pagerank", pr, time.time() - t0)
 
     t0 = time.time()
-    core, io, steps = jax.jit(lambda: coreness(sg, policy=policy))()
-    record("coreness", io, steps, time.time() - t0)
-    print(f"    kmax = {int(core.max())}")
+    core = g.coreness(policy=policy)
+    record("coreness", core, time.time() - t0)
+    print(f"    kmax = {int(core.values.max())}")
 
     t0 = time.time()
-    est, io, steps = diameter_multisource(sg, num_sources=16, sweeps=1,
-                                          policy=policy)
-    record("diameter", io, steps, time.time() - t0)
-    print(f"    estimate = {int(est)}")
+    diam = g.diameter(num_sources=16, sweeps=1, policy=policy)
+    record("diameter", diam, time.time() - t0)
+    print(f"    estimate = {int(diam.values)}")
 
     t0 = time.time()
-    deg = np.asarray(sg.out_degree)
+    deg = np.asarray(g.host.out_degree)
     srcs = np.argsort(-deg)[:8].astype(np.int32)
-    bc, io, steps, shared = bc_fused(sg, srcs)
-    record("betweenness", io, steps, time.time() - t0)
-    print(f"    shared fetches = {int(shared)}")
+    bc = g.betweenness(srcs, mode="fused")
+    record("betweenness", bc, time.time() - t0)
+    print(f"    shared fetches = {int(bc.state.shared)}")
 
     t0 = time.time()
-    tri = count_triangles(g, variant="restarted", ordered=True)
-    print(f"  {'triangles':12s} {tri.records * 8 / 1e6:9.2f} MB "
-          f"{tri.row_requests:9d} req {'-':>5s}       {time.time() - t0:7.2f}s")
-    print(f"    count = {tri.triangles}")
+    tri = g.triangles(variant="restarted", ordered=True)
+    record("triangles", tri, time.time() - t0)
+    print(f"    count = {int(tri.values)}")
 
     t0 = time.time()
-    res = louvain(g, materialize=False, max_levels=5)
-    print(f"  {'louvain':12s} {0.0:9.2f} MB {'-':>9s} {res.levels:5d} levels "
-          f"{time.time() - t0:7.2f}s")
-    print(f"    modularity = {res.modularity:.3f} (0 bytes rewritten)")
+    lv = g.louvain(materialize=False, max_levels=5)
+    record("louvain", lv, time.time() - t0)
+    print(f"    modularity = {lv.state.modularity:.3f} "
+          f"({int(lv.iostats.bytes_moved)} bytes rewritten)")
     return 0
 
 

@@ -1,46 +1,91 @@
-"""Quickstart: the Graphyti-JAX public API in ~40 lines.
+"""Quickstart: the Graphyti-JAX public API.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a skewed RMAT graph, runs PR-push (the paper's flagship principle),
-and prints the I/O accounting that distinguishes SEM from in-memory
-execution.
+One ``repro.Graph`` session owns the whole workflow: build the graph once,
+the engine builds (and caches) its SEM device views lazily, and every
+algorithm — built-in or user-written — runs through the same
+``run_program`` driver, returns the same ``ProgramResult``, and is steered
+by the same ``ExecutionPolicy``.
 """
 import sys
 
 sys.path.insert(0, "src")
 
-import jax
+from typing import NamedTuple
 
-from repro.algs import coreness, pagerank_push, pagerank_pull
-from repro.core import device_graph
+import jax.numpy as jnp
+
+import repro
+from repro.core import MIN_PLUS
 from repro.graph.generators import rmat
 
 # 1. A power-law graph (2^12 vertices, ~65k edges), Twitter-like skew.
-g = rmat(12, edge_factor=16, seed=7)
+#    Graph.from_edges(src, dst) works the same from raw COO arrays.
+g = repro.Graph(rmat(12, edge_factor=16, seed=7), chunk_size=1024)
 print(f"graph: n={g.n} m={g.m}")
 
-# 2. The SEM view: O(m) edge chunks (streamable, skippable) + O(n) state.
-sg = device_graph(g, chunk_size=4096)
+# 2. PR-push vs PR-pull — same ranks, different I/O (paper Fig. 2).  The
+#    session reuses one cached SEM view for both runs.
+push = g.pagerank()              # Graphyti's delta-push (P1)
+pull = g.pagerank(mode="pull")   # the Pregel-style baseline
+print(f"pagerank: {int(push.supersteps)} supersteps, "
+      f"top vertex {int(push.values.argmax())}")
+print(f"  push: {push.iostats.bytes() / 1e6:8.2f} MB read, "
+      f"{int(push.iostats.requests):8d} requests")
+print(f"  pull: {pull.iostats.bytes() / 1e6:8.2f} MB read, "
+      f"{int(pull.iostats.requests):8d} requests")
+print(f"  push saves "
+      f"{int(pull.iostats.records) / max(int(push.iostats.records), 1):.2f}x "
+      "read I/O (paper: 1.8x)")
 
-# 3. PR-push vs PR-pull — same ranks, different I/O (paper Fig. 2).
-ranks_push, io_push, iters = jax.jit(lambda: pagerank_push(sg))()
-ranks_pull, io_pull, _ = jax.jit(lambda: pagerank_pull(sg))()
-print(f"pagerank: {int(iters)} supersteps, top vertex {int(ranks_push.argmax())}")
-print(
-    f"  push: {io_push.bytes() / 1e6:8.2f} MB read, "
-    f"{int(io_push.requests):8d} requests"
-)
-print(
-    f"  pull: {io_pull.bytes() / 1e6:8.2f} MB read, "
-    f"{int(io_pull.requests):8d} requests"
-)
-print(
-    f"  push saves {int(io_pull.records) / max(int(io_push.records), 1):.2f}x "
-    "read I/O (paper: 1.8x)"
-)
+# 3. Every engine decision lives in ONE policy object: direction
+#    optimization (Beamer push<->pull), frontier-compacted work-lists,
+#    point-to-point sparse tails... no per-algorithm knobs.
+policy = repro.ExecutionPolicy(direction="auto", backend="compact",
+                               chunk_cap=16, adaptive_cap=True)
+bfs = g.bfs(0, policy=policy)
+print(f"bfs: {int(bfs.supersteps)} supersteps, "
+      f"{int(bfs.iostats.chunks_skipped)} chunk fetches skipped")
 
-# 4. Coreness with k-pruning + hybrid messaging (paper Fig. 3).
-sg_u = device_graph(rmat(12, edge_factor=16, seed=7, symmetrize=True))
-core, io_core, steps = jax.jit(lambda: coreness(sg_u))()
-print(f"coreness: kmax={int(core.max())} in {int(steps)} supersteps")
+# 4. Coreness with k-pruning + hybrid messaging (paper Fig. 3) on the
+#    symmetrized graph — a second session.
+gu = repro.Graph(rmat(12, edge_factor=16, seed=7, symmetrize=True))
+core = gu.coreness()
+print(f"coreness: kmax={int(core.values.max())} "
+      f"in {int(core.supersteps)} supersteps")
+
+
+# 5. Write your own algorithm in ~30 lines: a VertexProgram says WHAT a
+#    superstep means; the engine owns HOW it executes (chunk skipping,
+#    density dispatch, direction, I/O accounting).  This one is weakly
+#    connected components by min-label propagation — see
+#    examples/custom_program.py for the narrated version.
+class WCCState(NamedTuple):
+    labels: jnp.ndarray
+    active: jnp.ndarray
+
+
+class WCC(repro.VertexProgram):
+    semiring = MIN_PLUS
+
+    def init(self, sg, seeds):
+        return WCCState(jnp.arange(sg.n, dtype=jnp.float32),
+                        jnp.ones(sg.n, bool))
+
+    def frontier(self, sg, s):
+        return repro.Frontier(x=s.labels, active=s.active)
+
+    def apply(self, sg, s, gathered):
+        labels = jnp.minimum(s.labels, gathered)
+        changed = labels < s.labels
+        return WCCState(labels, changed), changed
+
+    def finalize(self, sg, s):
+        return s.labels.astype(jnp.int32)
+
+
+wcc = gu.run(WCC(), policy=policy)
+n_comp = int(jnp.unique(wcc.values).shape[0])
+print(f"custom WCC program: {n_comp} components "
+      f"in {int(wcc.supersteps)} supersteps")

@@ -17,10 +17,15 @@ Three variants, mirroring Fig. 6:
     asynchrony does not transfer to lockstep SPMD; per-source phase fusion
     is the transferable core (see DESIGN.md §8).
 
-The forward phase is a per-source functional ``add`` reduction of path
-counts; the backward phase a functional ``add`` of dependency scores — the
-paper's "functional constructs" principle maps directly onto segment
-reductions under the plus_times semiring.
+All three run on the shared :func:`~repro.core.run_program` driver:
+:class:`BCForwardProgram` is a frontier expansion (so ``direction='auto'``
+policies get Beamer switching), :class:`BCBackwardProgram` a reverse-flow
+countdown over levels (it overrides ``converged`` — its loop ends when the
+level hits 0, not when activations drain — and checks initial convergence
+so a zero-level search runs zero supersteps), and :class:`FusedBCProgram`
+overrides ``gather`` to issue BOTH phases' multicasts in one superstep with
+shared-fetch accounting.  ``bc_*`` are deprecated shims; new code goes
+through ``repro.Graph.betweenness()``.
 """
 from __future__ import annotations
 
@@ -31,17 +36,26 @@ import jax.numpy as jnp
 
 from ..core import (
     ExecutionPolicy,
+    Frontier,
     IOStats,
     SemGraph,
-    as_policy,
-    bsp_run,
+    VertexProgram,
+    legacy_policy,
+    run_program,
     sem_spmv,
     traverse,
 )
 from ..core.sem import _store_record_bytes, chunk_activity
 from ..core.semiring import PLUS_TIMES
 
-__all__ = ["bc_unisource", "bc_multisource", "bc_fused"]
+__all__ = [
+    "BCForwardProgram",
+    "BCBackwardProgram",
+    "FusedBCProgram",
+    "bc_unisource",
+    "bc_multisource",
+    "bc_fused",
+]
 
 # Historical BC behavior: pure multicast (no p2p arm), static push.
 _BC_DEFAULT = ExecutionPolicy(switch_fraction=None)
@@ -52,11 +66,9 @@ class _FwdState(NamedTuple):
     dist: jnp.ndarray  # int32[n, K] (-1 = unreached)
     frontier: jnp.ndarray  # bool[n, K]
     level: jnp.ndarray  # int32
-    io: IOStats
 
 
-def _forward(sg: SemGraph, sources: jnp.ndarray, max_iters: int,
-             pol: ExecutionPolicy):
+class BCForwardProgram(VertexProgram):
     """Synchronous multi-source BFS with path counting.
 
     The K source lanes ride the engine's lane dimension — under
@@ -66,68 +78,90 @@ def _forward(sg: SemGraph, sources: jnp.ndarray, max_iters: int,
     Beamer push↔pull switching (sigma sums then accumulate gather-side;
     same values up to float summation order).
     """
-    n = sg.n
-    K = sources.shape[0]
-    ar = jnp.arange(K)
-    sigma0 = jnp.zeros((n, K)).at[sources, ar].set(1.0)
-    dist0 = jnp.full((n, K), -1, jnp.int32).at[sources, ar].set(0)
-    front0 = jnp.zeros((n, K), bool).at[sources, ar].set(True)
 
-    def step(s: _FwdState):
-        active = jnp.any(s.frontier, axis=1)
-        unexplored = jnp.any(s.dist < 0, axis=1)
-        send = jnp.where(s.frontier, s.sigma, 0.0)
-        recv, st = traverse(sg, send, active, PLUS_TIMES, policy=pol,
-                            unexplored=unexplored)
+    semiring = PLUS_TIMES
+    default_policy = _BC_DEFAULT
+
+    def init(self, sg: SemGraph, seeds) -> _FwdState:
+        sources = jnp.asarray(seeds, jnp.int32)
+        n, K = sg.n, sources.shape[0]
+        ar = jnp.arange(K)
+        return _FwdState(
+            sigma=jnp.zeros((n, K)).at[sources, ar].set(1.0),
+            dist=jnp.full((n, K), -1, jnp.int32).at[sources, ar].set(0),
+            frontier=jnp.zeros((n, K), bool).at[sources, ar].set(True),
+            level=jnp.zeros((), jnp.int32),
+        )
+
+    def frontier(self, sg: SemGraph, s: _FwdState) -> Frontier:
+        return Frontier(
+            x=jnp.where(s.frontier, s.sigma, 0.0),
+            active=jnp.any(s.frontier, axis=1),
+            unexplored=jnp.any(s.dist < 0, axis=1),
+        )
+
+    def apply(self, sg: SemGraph, s: _FwdState, recv):
         newly = (recv > 0) & (s.dist < 0)
         sigma = jnp.where(newly, recv, s.sigma)
         dist = jnp.where(newly, s.level + 1, s.dist)
-        io = (s.io + st)._replace(supersteps=s.io.supersteps + 1)
-        done = ~jnp.any(newly)
-        return _FwdState(sigma, dist, newly, s.level + 1, io), done
-
-    def wrapped(carry):
-        s, _ = carry
-        s, done = step(s)
-        return (s, done), done
-
-    s0 = _FwdState(sigma0, dist0, front0, jnp.zeros((), jnp.int32), IOStats.zero())
-    (s, _), iters = bsp_run(wrapped, (s0, jnp.zeros((), bool)), max_iters)
-    return s, iters
+        return _FwdState(sigma, dist, newly, s.level + 1), newly
 
 
-def _backward(sg: SemGraph, sigma, dist, max_level, max_iters,
-              pol: ExecutionPolicy):
+class _BwdState(NamedTuple):
+    delta: jnp.ndarray  # f32[n, K] dependency scores
+    sigma: jnp.ndarray  # f32[n, K] (constant through the loop)
+    dist: jnp.ndarray  # int32[n, K] (constant through the loop)
+    level: jnp.ndarray  # int32 current receiving level
+
+
+class BCBackwardProgram(VertexProgram):
     """Synchronous dependency accumulation, level = max_level-1 .. 0.
 
     Messages flow *against* the edge direction (reverse push), which the
     p2p gather and the pull arm have no form for — the engine statically
     keeps reverse flows on the multicast/compact dispatch.
+
+    ``seeds``: ``(sigma, dist, max_level)`` from the forward phase.
     """
-    n, K = sigma.shape
 
-    def step(carry):
-        delta, level, io = carry
+    semiring = PLUS_TIMES
+    default_policy = _BC_DEFAULT
+    reverse = True
+    check_initial_convergence = True  # max_level 0 -> zero supersteps
+
+    def prepare_policy(self, sg: SemGraph, policy: ExecutionPolicy):
+        return policy.with_(direction="out")
+
+    def init(self, sg: SemGraph, seeds) -> _BwdState:
+        sigma, dist, max_level = seeds
+        return _BwdState(
+            delta=jnp.zeros(sigma.shape),
+            sigma=sigma,
+            dist=dist,
+            level=(max_level - 1).astype(jnp.int32),
+        )
+
+    def frontier(self, sg: SemGraph, s: _BwdState) -> Frontier:
         # senders: vertices at dist == level+1 (per source lane)
-        send_mask = dist == (level + 1)
-        x = jnp.where(send_mask, (1.0 + delta) / jnp.maximum(sigma, 1e-30), 0.0)
-        recv_mask = dist == level
-        active = jnp.any(recv_mask, axis=1)
-        recv, st = traverse(sg, x, active, PLUS_TIMES, reverse=True,
-                            policy=pol.with_(direction="out"))
-        delta = jnp.where(recv_mask, delta + sigma * recv, delta)
-        io = (io + st)._replace(supersteps=io.supersteps + 1)
-        return delta, level - 1, io
+        send_mask = s.dist == (s.level + 1)
+        x = jnp.where(send_mask, (1.0 + s.delta) / jnp.maximum(s.sigma, 1e-30),
+                      0.0)
+        recv_mask = s.dist == s.level
+        return Frontier(x=x, active=jnp.any(recv_mask, axis=1))
 
-    def cond(carry):
-        _, level, _ = carry
-        return level >= 0
+    def apply(self, sg: SemGraph, s: _BwdState, recv):
+        recv_mask = s.dist == s.level
+        delta = jnp.where(recv_mask, s.delta + s.sigma * recv, s.delta)
+        return s._replace(delta=delta, level=s.level - 1), recv_mask
 
-    delta0 = jnp.zeros((n, K))
-    delta, _, io = jax.lax.while_loop(
-        cond, step, (delta0, max_level - 1, IOStats.zero())
-    )
-    return delta, io
+    def converged(self, sg: SemGraph, s: _BwdState, activated):
+        return s.level < 0
+
+    def max_supersteps(self, sg: SemGraph) -> int:
+        return sg.n + 2
+
+    def finalize(self, sg: SemGraph, s: _BwdState) -> jnp.ndarray:
+        return s.delta
 
 
 def _finish(delta, sources):
@@ -137,29 +171,32 @@ def _finish(delta, sources):
     return jnp.sum(delta, axis=1)
 
 
+def _bc_sync(sg: SemGraph, sources: jnp.ndarray, max_iters, pol):
+    """Forward + backward phases through run_program (shared by shim/façade)."""
+    sources = jnp.asarray(sources, jnp.int32)
+    max_iters = max_iters or sg.n + 1
+    fwd = run_program(sg, BCForwardProgram(), pol, seeds=sources,
+                      max_supersteps=max_iters)
+    max_level = jnp.max(jnp.where(fwd.state.dist < 0, -1, fwd.state.dist))
+    bwd = run_program(sg, BCBackwardProgram(), pol,
+                      seeds=(fwd.state.sigma, fwd.state.dist, max_level))
+    io = fwd.iostats + bwd.iostats
+    bc = _finish(bwd.values, sources)
+    return bc, io, fwd.supersteps + jnp.maximum(max_level, 0)
+
+
 def bc_multisource(
     sg: SemGraph, sources: jnp.ndarray, *, max_iters: int | None = None,
     backend: str | None = None, chunk_cap: int | None = None,
     policy: Optional[ExecutionPolicy] = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
-    """Synchronous multi-source Brandes. Returns (bc[n], IOStats, supersteps).
-
-    ``policy``: ``backend='blocked'`` streams both the forward sigma pushes
-    and the backward dependency flows through the Pallas tile kernel (the
-    backward pass uses the transposed ``out_blocked_rev`` view);
-    ``chunk_cap`` compacts both phases' work-lists — the per-level
-    frontiers of Brandes are narrow, so most supersteps touch a handful of
-    chunks; ``direction='auto'`` makes the forward search
-    direction-optimizing (the backward phase stays on reverse push).
-    """
-    pol = as_policy(policy, _BC_DEFAULT, backend=backend, chunk_cap=chunk_cap)
-    sources = jnp.asarray(sources, jnp.int32)
-    max_iters = max_iters or sg.n + 1
-    fwd, fwd_iters = _forward(sg, sources, max_iters, pol)
-    max_level = jnp.max(jnp.where(fwd.dist < 0, -1, fwd.dist))
-    delta, bio = _backward(sg, fwd.sigma, fwd.dist, max_level, max_iters, pol)
-    io = fwd.io + bio
-    return _finish(delta, sources), io, fwd_iters + jnp.maximum(max_level, 0)
+    """Deprecated shim over the forward/backward programs — use
+    ``repro.Graph.betweenness()``.  Returns (bc[n], IOStats, supersteps)."""
+    pol = legacy_policy("bc_multisource",
+                        "repro.Graph.betweenness(policy=...)",
+                        policy, _BC_DEFAULT,
+                        backend=backend, chunk_cap=chunk_cap)
+    return _bc_sync(sg, sources, max_iters, pol)
 
 
 def bc_unisource(
@@ -167,16 +204,17 @@ def bc_unisource(
     backend: str | None = None, chunk_cap: int | None = None,
     policy: Optional[ExecutionPolicy] = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
-    """K separate single-source runs (the Fig. 6 baseline)."""
+    """Deprecated shim: K separate single-source runs (the Fig. 6 baseline)."""
+    pol = legacy_policy("bc_unisource",
+                        "repro.Graph.betweenness(mode='uni', policy=...)",
+                        policy, _BC_DEFAULT,
+                        backend=backend, chunk_cap=chunk_cap)
     sources = jnp.asarray(sources, jnp.int32)
     bc = jnp.zeros(sg.n)
     io = IOStats.zero()
     steps = jnp.zeros((), jnp.int32)
     for i in range(sources.shape[0]):
-        b, st, it = bc_multisource(
-            sg, sources[i : i + 1], max_iters=max_iters, backend=backend,
-            chunk_cap=chunk_cap, policy=policy,
-        )
+        b, st, it = _bc_sync(sg, sources[i : i + 1], max_iters, pol)
         bc, io, steps = bc + b, io + st, steps + it
     return bc, io, steps
 
@@ -188,76 +226,81 @@ class _FusedState(NamedTuple):
     delta: jnp.ndarray  # f32[n, K]
     phase: jnp.ndarray  # int32[K] 0=forward 1=backward 2=done
     level: jnp.ndarray  # int32[K] per-source current level
-    io: IOStats
     shared: jnp.ndarray  # int32 chunks saved by fwd/bwd fetch overlap
 
 
-def bc_fused(
-    sg: SemGraph, sources: jnp.ndarray, *, max_iters: int | None = None
-) -> tuple[jnp.ndarray, IOStats, jnp.ndarray, jnp.ndarray]:
+class FusedBCProgram(VertexProgram):
     """Phase-fused multi-source Brandes (the paper's async variant, §4.4).
 
     Each source runs forward BFS at its own pace; the moment a source's
     frontier drains it flips to the backward phase while other sources are
-    still searching.  One superstep issues a single union of chunk fetches
-    for both phases.
-
-    Returns (bc[n], IOStats, supersteps, shared_chunks) where
-    ``shared_chunks`` counts fetches served to both phases at once (the
-    cache-hit surplus of Fig. 6a).
+    still searching.  The ``gather`` override issues one superstep's worth
+    of BOTH phases' chunk fetches and accounts the union: chunks touched by
+    both phases are charged once (the page-cache-hit surplus of Fig. 6a,
+    tracked in ``state.shared``).
     """
-    n = sg.n
-    sources = jnp.asarray(sources, jnp.int32)
-    K = sources.shape[0]
-    ar = jnp.arange(K)
-    max_iters = max_iters or 2 * (n + 2)
 
-    s0 = _FusedState(
-        sigma=jnp.zeros((n, K)).at[sources, ar].set(1.0),
-        dist=jnp.full((n, K), -1, jnp.int32).at[sources, ar].set(0),
-        frontier=jnp.zeros((n, K), bool).at[sources, ar].set(True),
-        delta=jnp.zeros((n, K)),
-        phase=jnp.zeros(K, jnp.int32),
-        level=jnp.zeros(K, jnp.int32),
-        io=IOStats.zero(),
-        shared=jnp.zeros((), jnp.int32),
-    )
+    semiring = PLUS_TIMES
 
-    def step(s: _FusedState):
-        fwd_lane = s.phase == 0
+    def init(self, sg: SemGraph, seeds) -> _FusedState:
+        sources = jnp.asarray(seeds, jnp.int32)
+        n, K = sg.n, sources.shape[0]
+        ar = jnp.arange(K)
+        return _FusedState(
+            sigma=jnp.zeros((n, K)).at[sources, ar].set(1.0),
+            dist=jnp.full((n, K), -1, jnp.int32).at[sources, ar].set(0),
+            frontier=jnp.zeros((n, K), bool).at[sources, ar].set(True),
+            delta=jnp.zeros((n, K)),
+            phase=jnp.zeros(K, jnp.int32),
+            level=jnp.zeros(K, jnp.int32),
+            shared=jnp.zeros((), jnp.int32),
+        )
+
+    def frontier(self, sg: SemGraph, s: _FusedState) -> Frontier:
+        fwd_front = s.frontier & (s.phase == 0)[None, :]
+        return Frontier(x=jnp.where(fwd_front, s.sigma, 0.0),
+                        active=jnp.any(fwd_front, axis=1))
+
+    def gather(self, sg: SemGraph, s: _FusedState, fr: Frontier, policy):
         bwd_lane = s.phase == 1
 
         # ---- forward sub-step (lanes in phase 0) ----
-        fwd_front = s.frontier & fwd_lane[None, :]
-        fwd_active = jnp.any(fwd_front, axis=1)
-        send = jnp.where(fwd_front, s.sigma, 0.0)
-        recv, st_f = sem_spmv(sg.out_store, send, fwd_active, PLUS_TIMES)
-        newly = (recv > 0) & (s.dist < 0) & fwd_lane[None, :]
-        sigma = jnp.where(newly, recv, s.sigma)
-        dist = jnp.where(newly, s.level[None, :] + 1, s.dist)
+        recv, st_f = sem_spmv(sg.out_store, fr.x, fr.active, PLUS_TIMES)
 
         # ---- backward sub-step (lanes in phase 1, per-lane level) ----
         send_mask = (s.dist == (s.level[None, :] + 1)) & bwd_lane[None, :]
-        x = jnp.where(send_mask, (1.0 + s.delta) / jnp.maximum(s.sigma, 1e-30), 0.0)
+        x = jnp.where(send_mask,
+                      (1.0 + s.delta) / jnp.maximum(s.sigma, 1e-30), 0.0)
         recv_mask = (s.dist == s.level[None, :]) & bwd_lane[None, :]
         bwd_active = jnp.any(recv_mask, axis=1)
-        brecv, st_b = sem_spmv(sg.out_store, x, bwd_active, PLUS_TIMES, reverse=True)
-        delta = jnp.where(recv_mask, s.delta + s.sigma * brecv, s.delta)
+        brecv, st_b = sem_spmv(sg.out_store, x, bwd_active, PLUS_TIMES,
+                               reverse=True)
 
         # ---- shared-fetch accounting: union the two chunk sets ----
-        act_f = chunk_activity(sg.out_store, fwd_active)
+        act_f = chunk_activity(sg.out_store, fr.active)
         act_b = chunk_activity(sg.out_store, bwd_active)
         both = jnp.sum((act_f & act_b).astype(jnp.int32))
         # Requests are still issued by both phases; the page cache serves the
         # second phase's overlapping chunks for free (records saved).
-        io = s.io + st_f + st_b
         saved = both * sg.out_store.chunk_size
-        io = io._replace(
-            records=io.records - saved,
-            bytes_moved=io.bytes_moved
+        st = (st_f + st_b)._replace(
+            records=st_f.records + st_b.records - saved,
+            bytes_moved=st_f.bytes_moved + st_b.bytes_moved
             - saved * _store_record_bytes(sg.out_store.w),
-            supersteps=io.supersteps + 1,
         )
+        return (recv, brecv, both), st
+
+    def apply(self, sg: SemGraph, s: _FusedState, gathered):
+        recv, brecv, both = gathered
+        fwd_lane = s.phase == 0
+        bwd_lane = s.phase == 1
+
+        newly = (recv > 0) & (s.dist < 0) & fwd_lane[None, :]
+        sigma = jnp.where(newly, recv, s.sigma)
+        dist = jnp.where(newly, s.level[None, :] + 1, s.dist)
+
+        recv_mask = (s.dist == s.level[None, :]) & bwd_lane[None, :]
+        delta = jnp.where(recv_mask, s.delta + s.sigma * brecv, s.delta)
 
         # ---- per-source phase/level transitions ----
         lane_has_new = jnp.any(newly, axis=0)
@@ -265,24 +308,43 @@ def bc_fused(
         # deepest level reached per lane (senders for the first bwd step)
         deepest = jnp.max(dist, axis=0)
         level = jnp.where(fwd_to_bwd, jnp.maximum(deepest - 1, -1), s.level)
-        phase = jnp.where(fwd_to_bwd & (level < 0), 2, jnp.where(fwd_to_bwd, 1, s.phase))
+        phase = jnp.where(fwd_to_bwd & (level < 0), 2,
+                          jnp.where(fwd_to_bwd, 1, s.phase))
         # backward lanes step down; done below level 0
         stepped_down = jnp.where(bwd_lane, s.level - 1, level)
         level = jnp.where(bwd_lane, stepped_down, level)
         phase = jnp.where(bwd_lane & (stepped_down < 0), 2, phase)
         level = jnp.where(fwd_lane & lane_has_new, s.level + 1, level)
 
-        frontier = newly
-        done = jnp.all(phase == 2)
-        return (
-            _FusedState(sigma, dist, frontier, delta, phase, level, io, s.shared + both),
-            done,
-        )
+        s = _FusedState(sigma, dist, newly, delta, phase, level,
+                        s.shared + both)
+        return s, newly
 
-    def wrapped(carry):
-        s, _ = carry
-        s, done = step(s)
-        return (s, done), done
+    def converged(self, sg: SemGraph, s: _FusedState, activated):
+        return jnp.all(s.phase == 2)
 
-    (s, _), iters = bsp_run(wrapped, (s0, jnp.zeros((), bool)), max_iters)
-    return _finish(s.delta, sources), s.io, iters, s.shared
+    def max_supersteps(self, sg: SemGraph) -> int:
+        return 2 * (sg.n + 2)
+
+    def finalize(self, sg: SemGraph, s: _FusedState) -> jnp.ndarray:
+        return s.delta
+
+
+def bc_fused(
+    sg: SemGraph, sources: jnp.ndarray, *, max_iters: int | None = None
+) -> tuple[jnp.ndarray, IOStats, jnp.ndarray, jnp.ndarray]:
+    """Deprecated shim over :class:`FusedBCProgram` — use
+    ``repro.Graph.betweenness(mode='fused')``.
+
+    Returns (bc[n], IOStats, supersteps, shared_chunks) where
+    ``shared_chunks`` counts fetches served to both phases at once (the
+    cache-hit surplus of Fig. 6a).
+    """
+    from ..core import warn_legacy
+
+    warn_legacy("bc_fused", "repro.Graph.betweenness(mode='fused')")
+    sources = jnp.asarray(sources, jnp.int32)
+    res = run_program(sg, FusedBCProgram(), seeds=sources,
+                      max_supersteps=max_iters)
+    return (_finish(res.values, sources), res.iostats, res.supersteps,
+            res.state.shared)

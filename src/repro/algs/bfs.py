@@ -9,26 +9,43 @@ packed word).  Every chunk fetched in a superstep serves *all* K searches —
 the page-cache-reuse effect of Fig. 4/5 — so multi-source I/O grows far
 slower than K× the uni-source I/O.
 
-Direction optimization: the step is expressed as a frontier-expansion
-:func:`repro.core.traverse`, so an :class:`~repro.core.ExecutionPolicy`
-with ``direction='auto'`` gets Beamer-style push↔pull switching — the
-engine streams the *unexplored* side's in-edges in the middle supersteps
-where the frontier's out-edge mass dwarfs what is left to discover.
-Levels and ``messages`` are bitwise-identical to static push in every
-mode; only wall-clock and bytes change.
+The whole algorithm is a :class:`BFSProgram` — ~30 lines of vertex logic on
+the shared :func:`repro.core.run_program` driver.  Because its frontier
+carries an ``unexplored`` candidate set, an
+:class:`~repro.core.ExecutionPolicy` with ``direction='auto'`` gets
+Beamer-style push↔pull switching for free: the engine streams the
+*unexplored* side's in-edges in the middle supersteps where the frontier's
+out-edge mass dwarfs what is left to discover.  Levels and ``messages`` are
+bitwise-identical to static push in every mode; only wall-clock and bytes
+change.
+
+``bfs_multi`` / ``bfs_uni`` are deprecated shims over the program; new code
+goes through ``repro.Graph.bfs()``.
 """
 from __future__ import annotations
 
 from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
+import numpy as np
 
-from ..core import ExecutionPolicy, IOStats, SemGraph, as_policy, bsp_run, traverse
+from ..core import (
+    ExecutionPolicy,
+    Frontier,
+    IOStats,
+    ProgramResult,
+    SemGraph,
+    VertexProgram,
+    legacy_policy,
+    run_program,
+)
 from ..core.semiring import OR_AND
 
-__all__ = ["bfs_multi", "bfs_uni", "UNREACHED"]
+__all__ = ["BFSProgram", "bfs_multi", "bfs_uni", "UNREACHED"]
 
-UNREACHED = jnp.int32(jnp.iinfo(jnp.int32).max)
+# Host-side (numpy) so importing this module inside a jit trace — e.g. a
+# lazy import during the first traced façade call — cannot leak a tracer.
+UNREACHED = np.int32(np.iinfo(np.int32).max)
 
 # Historical BFS behavior: pure multicast (no p2p arm) static push.
 _BFS_DEFAULT = ExecutionPolicy(switch_fraction=None)
@@ -39,7 +56,43 @@ class BFSState(NamedTuple):
     frontier: jnp.ndarray  # bool[n, K] newly reached last superstep
     dist: jnp.ndarray  # int32[n, K]
     level: jnp.ndarray  # int32 scalar
-    io: IOStats
+
+
+class BFSProgram(VertexProgram):
+    """K concurrent BFS over the out-edges (or_and frontier expansion).
+
+    ``seeds``: int32[K] source vertex ids.  ``values``: int32[n, K]
+    distances, :data:`UNREACHED` where a lane never arrives.
+    """
+
+    semiring = OR_AND
+    default_policy = _BFS_DEFAULT
+
+    def init(self, sg: SemGraph, seeds) -> BFSState:
+        sources = jnp.asarray(seeds, jnp.int32)
+        n, K = sg.n, sources.shape[0]
+        lanes = jnp.arange(K)
+        reached = jnp.zeros((n, K), bool).at[sources, lanes].set(True)
+        dist = jnp.full((n, K), UNREACHED, jnp.int32).at[sources, lanes].set(0)
+        return BFSState(reached, reached, dist, jnp.zeros((), jnp.int32))
+
+    def frontier(self, sg: SemGraph, s: BFSState) -> Frontier:
+        # Pull candidates: vertices unexplored in at least one lane — the
+        # only rows a BFS step ever reads (newly = nxt & ~reached).
+        return Frontier(
+            x=s.frontier,
+            active=jnp.any(s.frontier, axis=1),
+            unexplored=~jnp.all(s.reached, axis=1),
+        )
+
+    def apply(self, sg: SemGraph, s: BFSState, nxt):
+        newly = nxt & ~s.reached
+        reached = s.reached | newly
+        dist = jnp.where(newly, s.level + 1, s.dist)
+        return BFSState(reached, newly, dist, s.level + 1), newly
+
+    def finalize(self, sg: SemGraph, s: BFSState) -> jnp.ndarray:
+        return s.dist
 
 
 def bfs_multi(
@@ -51,53 +104,17 @@ def bfs_multi(
     chunk_cap: int | None = None,
     policy: Optional[ExecutionPolicy] = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
-    """K concurrent BFS over the out-edges.
+    """Deprecated shim over :class:`BFSProgram` — use ``repro.Graph.bfs()``.
 
-    Args:
-      sources: int32[K] source vertex ids.
-      policy: the engine :class:`~repro.core.ExecutionPolicy`.
-        ``direction='auto'`` enables Beamer push↔pull switching (needs a
-        graph with pull views); ``adaptive_cap=True`` re-buckets the
-        compact work-list per superstep, which is what keeps the long
-        drain of a high-diameter BFS on single-chunk scans.
-      backend / chunk_cap: deprecated — merged into ``policy``.
-
-    Returns:
-      (dist int32[n, K] — UNREACHED where not reached, IOStats, supersteps).
+    Returns (dist int32[n, K] — UNREACHED where not reached, IOStats,
+    supersteps), exactly as the pre-program implementation did.
     """
-    pol = as_policy(policy, _BFS_DEFAULT, backend=backend, chunk_cap=chunk_cap)
-    n = sg.n
-    sources = jnp.asarray(sources, jnp.int32)
-    K = sources.shape[0]
-    if max_iters is None:
-        max_iters = n + 1
-
-    reached0 = jnp.zeros((n, K), bool).at[sources, jnp.arange(K)].set(True)
-    dist0 = jnp.full((n, K), UNREACHED, jnp.int32).at[sources, jnp.arange(K)].set(0)
-
-    def step(s: BFSState) -> tuple[BFSState, jnp.ndarray]:
-        active = jnp.any(s.frontier, axis=1)
-        # Pull candidates: vertices unexplored in at least one lane — the
-        # only rows a BFS step ever reads (newly = nxt & ~reached).
-        unexplored = ~jnp.all(s.reached, axis=1)
-        nxt, st = traverse(sg, s.frontier, active, OR_AND, policy=pol,
-                           unexplored=unexplored)
-        newly = nxt & ~s.reached
-        reached = s.reached | newly
-        dist = jnp.where(newly, s.level + 1, s.dist)
-        io = (s.io + st)._replace(supersteps=s.io.supersteps + st.supersteps + 1)
-        done = ~jnp.any(newly)
-        return BFSState(reached, newly, dist, s.level + 1, io), done
-
-    s0 = BFSState(reached0, reached0, dist0, jnp.zeros((), jnp.int32), IOStats.zero())
-
-    def wrapped(carry):
-        s, _ = carry
-        s, done = step(s)
-        return (s, done), done
-
-    (s, _), iters = bsp_run(wrapped, (s0, jnp.zeros((), bool)), max_iters)
-    return s.dist, s.io, iters
+    pol = legacy_policy("bfs_multi", "repro.Graph.bfs(policy=...)",
+                        policy, _BFS_DEFAULT,
+                        backend=backend, chunk_cap=chunk_cap)
+    res = run_program(sg, BFSProgram(), pol, seeds=sources,
+                      max_supersteps=max_iters)
+    return res.values, res.iostats, res.supersteps
 
 
 def bfs_uni(
@@ -105,9 +122,11 @@ def bfs_uni(
     backend: str | None = None, chunk_cap: int | None = None,
     policy: Optional[ExecutionPolicy] = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
-    """Single-source BFS (the K=1 degenerate case, for the Fig. 5 baseline)."""
-    dist, io, iters = bfs_multi(
-        sg, jnp.asarray([source], jnp.int32), max_iters=max_iters,
-        backend=backend, chunk_cap=chunk_cap, policy=policy,
-    )
-    return dist[:, 0], io, iters
+    """Deprecated single-source shim (the K=1 case of :class:`BFSProgram`)."""
+    pol = legacy_policy("bfs_uni", "repro.Graph.bfs(policy=...)",
+                        policy, _BFS_DEFAULT,
+                        backend=backend, chunk_cap=chunk_cap)
+    res = run_program(sg, BFSProgram(), pol,
+                      seeds=jnp.asarray([source], jnp.int32),
+                      max_supersteps=max_iters)
+    return res.values[:, 0], res.iostats, res.supersteps

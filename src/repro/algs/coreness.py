@@ -12,6 +12,14 @@ The benchmark triple reproducing Fig. 3:
 
 Works on undirected (symmetrized) graphs; the degree used is out-degree,
 which equals total degree after symmetrization.
+
+The peeling loop is a :class:`CorenessProgram` on the shared
+:func:`~repro.core.run_program` driver.  Its ``gather`` override shows a
+program shaping its own I/O: a superstep that removes nothing advances the
+peeling level *without* touching the engine (a ``lax.cond`` skips the
+multicast entirely), so empty rounds cost zero I/O — exactly the ledger
+the pre-program implementation kept.  ``coreness`` is a deprecated shim;
+new code goes through ``repro.Graph.coreness()``.
 """
 from __future__ import annotations
 
@@ -22,16 +30,18 @@ import jax.numpy as jnp
 
 from ..core import (
     ExecutionPolicy,
+    Frontier,
     IOStats,
     SemGraph,
-    as_policy,
-    bsp_run,
+    VertexProgram,
+    legacy_policy,
     p2p_spmv,
+    run_program,
     traverse,
 )
 from ..core.semiring import PLUS_TIMES
 
-__all__ = ["coreness"]
+__all__ = ["CorenessProgram", "coreness"]
 
 _INT_MAX = jnp.iinfo(jnp.int32).max
 
@@ -41,7 +51,98 @@ class CoreState(NamedTuple):
     alive: jnp.ndarray  # bool[n]
     core: jnp.ndarray  # int32[n] assigned coreness (valid once removed)
     k: jnp.ndarray  # int32 current peeling level
-    io: IOStats
+
+
+class CorenessProgram(VertexProgram):
+    """k-core peeling.  ``values``: int32[n] core numbers.
+
+    Each superstep removes every live vertex with current degree <= k and
+    multicasts degree decrements to its neighbors.  When a superstep
+    removes nothing, k advances — to k+1 unpruned, or directly to
+    ``min(deg[alive])`` with pruning (P3): intermediate k values cannot
+    remove any vertex, so their supersteps (and their frontier scans) are
+    pure waste.
+
+    ``messaging`` keeps the Fig. 3 benchmark triple: 'dense' is pure
+    multicast, 'p2p' always row-exact fetches, 'hybrid' the engine's
+    density dispatch.  The policy refines the 'dense'/'hybrid' execution —
+    peeling frontiers are usually tiny (the vertices that just dropped to
+    degree k), so a ``chunk_cap`` routes mid-density removals through the
+    compact scan (P2 paid in wall-clock, not just counters).
+    """
+
+    semiring = PLUS_TIMES
+
+    def __init__(self, *, prune: bool = True, messaging: str = "hybrid"):
+        assert messaging in ("dense", "p2p", "hybrid")
+        self.prune = prune
+        self.messaging = messaging
+
+    def prepare_policy(self, sg: SemGraph, policy: ExecutionPolicy):
+        pol = policy.with_(direction="out")
+        if self.messaging == "dense":
+            pol = pol.with_(switch_fraction=None)
+        else:
+            pol = pol.with_(
+                vcap=pol.vcap if pol.vcap is not None else sg.n,
+                ecap=pol.ecap if pol.ecap is not None else max(int(sg.m), 1),
+            )
+        return pol
+
+    def init(self, sg: SemGraph, seeds) -> CoreState:
+        return CoreState(
+            deg=sg.out_degree.astype(jnp.int32),
+            alive=jnp.ones(sg.n, bool),
+            core=jnp.zeros(sg.n, jnp.int32),
+            k=jnp.zeros((), jnp.int32),
+        )
+
+    def frontier(self, sg: SemGraph, s: CoreState) -> Frontier:
+        removed = s.alive & (s.deg <= s.k)
+        return Frontier(x=jnp.where(removed, -1.0, 0.0), active=removed)
+
+    def gather(self, sg: SemGraph, s: CoreState, fr: Frontier, policy):
+        """Push -1 along out-edges of removed vertices — but only when the
+        round removes anything; an advance round does zero I/O."""
+
+        def fetch(_):
+            if self.messaging == "p2p":
+                return p2p_spmv(sg, fr.x, fr.active, PLUS_TIMES,
+                                direction="out", vcap=sg.n,
+                                ecap=max(int(sg.m), 1))
+            return traverse(sg, fr.x, fr.active, PLUS_TIMES, policy=policy)
+
+        def skip(_):
+            return jnp.zeros(sg.n), IOStats.zero()
+
+        return jax.lax.cond(jnp.any(fr.active), fetch, skip, None)
+
+    def apply(self, sg: SemGraph, s: CoreState, delta):
+        removed = s.alive & (s.deg <= s.k)
+
+        def remove(_):
+            core = jnp.where(removed, s.k, s.core)
+            alive = s.alive & ~removed
+            deg = s.deg + delta.astype(jnp.int32)
+            return CoreState(deg, alive, core, s.k)
+
+        def advance(_):
+            live_deg = jnp.where(s.alive, s.deg, _INT_MAX)
+            next_k = jnp.min(live_deg) if self.prune else s.k + 1
+            next_k = jnp.maximum(next_k, s.k + 1)
+            return CoreState(s.deg, s.alive, s.core, next_k)
+
+        s = jax.lax.cond(jnp.any(removed), remove, advance, None)
+        return s, s.alive
+
+    def converged(self, sg: SemGraph, s: CoreState, activated):
+        return ~jnp.any(s.alive)
+
+    def max_supersteps(self, sg: SemGraph) -> int:
+        return 4 * sg.n + 64
+
+    def finalize(self, sg: SemGraph, s: CoreState) -> jnp.ndarray:
+        return s.core
 
 
 def coreness(
@@ -54,81 +155,12 @@ def coreness(
     chunk_cap: int | None = None,
     policy: Optional[ExecutionPolicy] = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
-    """k-core decomposition. Returns (core_number[n], IOStats, supersteps).
-
-    Each superstep removes every live vertex with current degree <= k and
-    multicasts degree decrements to its neighbors.  When a superstep removes
-    nothing, k advances — to k+1 unpruned, or directly to
-    ``min(deg[alive])`` with pruning (P3): intermediate k values cannot
-    remove any vertex, so their supersteps (and their frontier scans) are
-    pure waste.
-
-    ``messaging`` keeps the Fig. 3 benchmark triple: 'dense' is pure
-    multicast, 'p2p' always row-exact fetches, 'hybrid' the engine's
-    density dispatch.  ``policy`` (new API) refines the 'dense'/'hybrid'
-    execution — peeling frontiers are usually tiny (the vertices that just
-    dropped to degree k), so a ``chunk_cap`` routes mid-density removals
-    through the compact scan (P2 paid in wall-clock, not just counters).
-    """
-    assert messaging in ("dense", "p2p", "hybrid")
-    n = sg.n
-    vcap = n
-    ecap = max(int(sg.m), 1)
-    if max_supersteps is None:
-        max_supersteps = 4 * n + 64
-    pol = as_policy(policy, None, chunk_cap=chunk_cap,
-                    switch_fraction=switch_fraction)
-    pol = pol.with_(direction="out")
-    if messaging == "dense":
-        pol = pol.with_(switch_fraction=None)
-    else:
-        pol = pol.with_(vcap=pol.vcap if pol.vcap is not None else vcap,
-                        ecap=pol.ecap if pol.ecap is not None else ecap)
-
-    def decrement(removed: jnp.ndarray, deg: jnp.ndarray, io: IOStats):
-        """Push -1 along out-edges of removed vertices; returns new degrees."""
-        x = jnp.where(removed, -1.0, 0.0)
-        if messaging == "p2p":
-            delta, st = p2p_spmv(
-                sg, x, removed, PLUS_TIMES, direction="out", vcap=vcap, ecap=ecap
-            )
-        else:
-            delta, st = traverse(sg, x, removed, PLUS_TIMES, policy=pol)
-        return deg + delta.astype(jnp.int32), io + st
-
-    def step(s: CoreState) -> tuple[CoreState, jnp.ndarray]:
-        frontier = s.alive & (s.deg <= s.k)
-        any_removed = jnp.any(frontier)
-
-        def remove(_):
-            core = jnp.where(frontier, s.k, s.core)
-            alive = s.alive & ~frontier
-            deg, io = decrement(frontier, s.deg, s.io)
-            return CoreState(deg, alive, core, s.k, io)
-
-        def advance(_):
-            live_deg = jnp.where(s.alive, s.deg, _INT_MAX)
-            next_k = jnp.min(live_deg) if prune else s.k + 1
-            next_k = jnp.maximum(next_k, s.k + 1)
-            return CoreState(s.deg, s.alive, s.core, next_k, s.io)
-
-        s = jax.lax.cond(any_removed, remove, advance, None)
-        done = ~jnp.any(s.alive)
-        s = s._replace(io=s.io._replace(supersteps=s.io.supersteps + 1))
-        return s, done
-
-    s0 = CoreState(
-        deg=sg.out_degree.astype(jnp.int32),
-        alive=jnp.ones(n, bool),
-        core=jnp.zeros(n, jnp.int32),
-        k=jnp.zeros((), jnp.int32),
-        io=IOStats.zero(),
-    )
-
-    def wrapped(carry):
-        s, _ = carry
-        s, done = step(s)
-        return (s, done), done
-
-    (s, _), iters = bsp_run(wrapped, (s0, jnp.zeros((), bool)), max_supersteps)
-    return s.core, s.io, iters
+    """Deprecated shim over :class:`CorenessProgram` — use
+    ``repro.Graph.coreness()``.  Returns (core_number[n], IOStats,
+    supersteps)."""
+    pol = legacy_policy("coreness", "repro.Graph.coreness(policy=...)",
+                        policy, None, chunk_cap=chunk_cap,
+                        switch_fraction=switch_fraction)
+    res = run_program(sg, CorenessProgram(prune=prune, messaging=messaging),
+                      pol, max_supersteps=max_supersteps)
+    return res.values, res.iostats, res.supersteps

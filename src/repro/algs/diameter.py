@@ -6,9 +6,13 @@ pseudo-peripheral vertices sampled from that frontier.  The estimate is the
 maximum eccentricity observed — always a lower bound on the true diameter,
 and exact on many structured graphs.
 
+Every sweep is a :class:`~repro.algs.bfs.BFSProgram` run on the shared
+:func:`~repro.core.run_program` driver; this module only orchestrates the
+sweeps (host-side source selection between device-side searches).
 ``diameter_unisource`` performs the same sweeps with K sequential
 single-source BFS runs (the Fig. 5 baseline): same answer, K× the chunk
-fetches, K× the supersteps.
+fetches, K× the supersteps.  Both entry points are deprecated shims; new
+code goes through ``repro.Graph.diameter()``.
 """
 from __future__ import annotations
 
@@ -16,8 +20,8 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-from ..core import ExecutionPolicy, IOStats, SemGraph
-from .bfs import UNREACHED, bfs_multi, bfs_uni
+from ..core import ExecutionPolicy, IOStats, SemGraph, legacy_policy, run_program
+from .bfs import _BFS_DEFAULT, UNREACHED, BFSProgram
 
 __all__ = ["diameter_multisource", "diameter_unisource"]
 
@@ -32,6 +36,60 @@ def _max_dist(dist: jnp.ndarray) -> jnp.ndarray:
     return jnp.max(jnp.where(dist == UNREACHED, -1, dist))
 
 
+def _bfs(sg, sources, pol):
+    """(dist[n, K], IOStats, supersteps) for one BFS program run."""
+    res = run_program(sg, BFSProgram(), pol, seeds=sources)
+    return res.values, res.iostats, res.supersteps
+
+
+def _diameter(
+    sg: SemGraph,
+    pol: Optional[ExecutionPolicy],
+    *,
+    num_sources: int,
+    sweeps: int,
+    seed_vertex: int | None,
+    multi: bool,
+) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
+    """Shared sweep orchestration (legacy shims and the façade call this).
+
+    ``multi=True`` runs each sweep as one K-lane program (chunk fetches
+    shared across sources); ``multi=False`` runs K separate single-source
+    programs — the sweeps spend most supersteps on narrow frontiers, where
+    the compact backend pays, and high-diameter inputs are exactly where
+    ``direction='auto'`` keeps the drain on push while low-diameter sweeps
+    flip to pull.
+    """
+    if seed_vertex is None:
+        seed_vertex = int(jnp.argmax(sg.out_degree))
+    dist, io, iters = _bfs(sg, jnp.asarray([seed_vertex], jnp.int32), pol)
+    dist = dist[:, 0]
+    estimate = _max_dist(dist)
+    total_steps = iters
+    for _ in range(sweeps):
+        sources = _farthest(dist, num_sources)
+        if multi:
+            dist_k, io_k, iters_k = _bfs(sg, sources, pol)
+            estimate = jnp.maximum(estimate, _max_dist(dist_k))
+            io = io + io_k
+            total_steps = total_steps + iters_k
+            # Farthest-from-any-source drives the next sweep (finite only).
+            best = jnp.where(dist_k == UNREACHED, -1, dist_k).max(axis=1)
+        else:
+            best = jnp.full(sg.n, -1, jnp.int32)
+            for i in range(num_sources):
+                d_i, io_i, it_i = _bfs(
+                    sg, sources[i : i + 1].astype(jnp.int32), pol
+                )
+                d_i = d_i[:, 0]
+                estimate = jnp.maximum(estimate, _max_dist(d_i))
+                io = io + io_i
+                total_steps = total_steps + it_i
+                best = jnp.maximum(best, jnp.where(d_i == UNREACHED, -1, d_i))
+        dist = jnp.where(best < 0, UNREACHED, best)
+    return estimate, io, total_steps
+
+
 def diameter_multisource(
     sg: SemGraph,
     *,
@@ -42,32 +100,15 @@ def diameter_multisource(
     chunk_cap: int | None = None,
     policy: Optional[ExecutionPolicy] = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
-    """Estimate the diameter with ``sweeps`` rounds of K-source BFS.
+    """Deprecated shim — use ``repro.Graph.diameter()``.
 
-    ``policy`` (or the deprecated ``backend``/``chunk_cap``) is forwarded
-    to the underlying BFS — the sweeps spend most supersteps on narrow
-    frontiers, where the compact backend pays, and high-diameter inputs
-    are exactly where ``direction='auto'`` keeps the drain on push while
-    low-diameter sweeps flip to pull.  Returns (estimate, IOStats,
-    supersteps).
-    """
-    if seed_vertex is None:
-        seed_vertex = int(jnp.argmax(sg.out_degree))
-    dist, io, iters = bfs_uni(sg, seed_vertex, backend=backend,
-                              chunk_cap=chunk_cap, policy=policy)
-    estimate = _max_dist(dist)
-    total_steps = iters
-    for _ in range(sweeps):
-        sources = _farthest(dist, num_sources)
-        dist_k, io_k, iters_k = bfs_multi(sg, sources, backend=backend,
-                                          chunk_cap=chunk_cap, policy=policy)
-        estimate = jnp.maximum(estimate, _max_dist(dist_k))
-        io = io + io_k
-        total_steps = total_steps + iters_k
-        # Farthest-from-any-source drives the next sweep (finite dists only).
-        best = jnp.where(dist_k == UNREACHED, -1, dist_k).max(axis=1)
-        dist = jnp.where(best < 0, UNREACHED, best)
-    return estimate, io, total_steps
+    Returns (estimate, IOStats, supersteps)."""
+    pol = legacy_policy("diameter_multisource",
+                        "repro.Graph.diameter(policy=...)",
+                        policy, _BFS_DEFAULT,
+                        backend=backend, chunk_cap=chunk_cap)
+    return _diameter(sg, pol, num_sources=num_sources, sweeps=sweeps,
+                     seed_vertex=seed_vertex, multi=True)
 
 
 def diameter_unisource(
@@ -80,22 +121,10 @@ def diameter_unisource(
     chunk_cap: int | None = None,
     policy: Optional[ExecutionPolicy] = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
-    """Identical sweeps, but each source runs its own full BFS (no sharing)."""
-    if seed_vertex is None:
-        seed_vertex = int(jnp.argmax(sg.out_degree))
-    dist, io, iters = bfs_uni(sg, seed_vertex, backend=backend,
-                              chunk_cap=chunk_cap, policy=policy)
-    estimate = _max_dist(dist)
-    total_steps = iters
-    for _ in range(sweeps):
-        sources = _farthest(dist, num_sources)
-        best = jnp.full(sg.n, -1, jnp.int32)
-        for i in range(num_sources):
-            d_i, io_i, it_i = bfs_uni(sg, int(sources[i]), backend=backend,
-                                      chunk_cap=chunk_cap, policy=policy)
-            estimate = jnp.maximum(estimate, _max_dist(d_i))
-            io = io + io_i
-            total_steps = total_steps + it_i
-            best = jnp.maximum(best, jnp.where(d_i == UNREACHED, -1, d_i))
-        dist = jnp.where(best < 0, UNREACHED, best)
-    return estimate, io, total_steps
+    """Deprecated shim: identical sweeps, one full BFS per source."""
+    pol = legacy_policy("diameter_unisource",
+                        "repro.Graph.diameter(mode='uni', policy=...)",
+                        policy, _BFS_DEFAULT,
+                        backend=backend, chunk_cap=chunk_cap)
+    return _diameter(sg, pol, num_sources=num_sources, sweeps=sweeps,
+                     seed_vertex=seed_vertex, multi=False)

@@ -13,6 +13,14 @@ Both iterate the same fixed point
     R(u) = (1 - c)/n + c * sum_{v in B_u} R(v) / N_v
 
 so they agree to tolerance; only their I/O behaviour differs (Fig. 2).
+
+Both are :class:`~repro.core.VertexProgram` instances on the shared
+:func:`~repro.core.run_program` driver.  PR-push is the textbook case —
+one frontier multicast per superstep; PR-pull exercises the two optional
+hooks: a ``gather`` override (its dataflow direction is pinned to 'in')
+and an ``activate`` hook (the Pregel-style out-edge activation multicast
+that wakes next-superstep gatherers).  ``pagerank_pull`` / ``pagerank_push``
+are deprecated shims; new code goes through ``repro.Graph.pagerank()``.
 """
 from __future__ import annotations
 
@@ -23,32 +31,168 @@ import jax.numpy as jnp
 
 from ..core import (
     ExecutionPolicy,
+    Frontier,
     IOStats,
     SemGraph,
-    as_policy,
-    bsp_run,
+    VertexProgram,
     flat_spmv,
+    legacy_policy,
+    run_program,
     traverse,
 )
 from ..core.semiring import OR_AND, PLUS_TIMES
 
-__all__ = ["pagerank_pull", "pagerank_push", "pagerank_inmem"]
+__all__ = [
+    "PageRankPullProgram",
+    "PageRankPushProgram",
+    "pagerank_pull",
+    "pagerank_push",
+    "pagerank_inmem",
+]
 
 # PR-pull's historical execution: pure multicast, no p2p arm.
 _PULL_DEFAULT = ExecutionPolicy(switch_fraction=None)
-
-
-class PRState(NamedTuple):
-    rank: jnp.ndarray
-    aux: jnp.ndarray  # pull: previous rank; push: accumulated residual
-    active: jnp.ndarray
-    io: IOStats
 
 
 def _out_contrib(sg: SemGraph, values: jnp.ndarray) -> jnp.ndarray:
     """values / out_degree, with dangling vertices contributing nothing."""
     deg = jnp.maximum(sg.out_degree, 1)
     return jnp.where(sg.out_degree > 0, values / deg, 0.0)
+
+
+class PRPullState(NamedTuple):
+    rank: jnp.ndarray
+    prev: jnp.ndarray  # previous rank
+    active: jnp.ndarray  # gatherers this superstep
+    changed: jnp.ndarray  # moved beyond threshold (drives activation)
+
+
+class PageRankPullProgram(VertexProgram):
+    """Pregel/Turi-style PR-pull (the paper's baseline, §4.1).
+
+    Per superstep an *activated* vertex (1) gathers the ranks of ALL its
+    in-neighbors — including neighbors that converged long ago, the
+    superfluous reads P1 targets — and (2) if its own rank moved more than
+    the threshold, multicasts an activation to its out-neighbors, which
+    costs a second pass over its out-edge chunks.  Both passes are real
+    chunk I/O, exactly as in FlashGraph where the vertex must read its edge
+    lists to know gather sources and multicast recipients.
+
+    The dataflow directions are fixed by the algorithm (the ``gather``
+    override pins 'in', the ``activate`` multicast pins 'out'); the policy
+    controls everything else (backend, caps, p2p).
+    """
+
+    semiring = PLUS_TIMES
+    default_policy = _PULL_DEFAULT
+
+    def __init__(self, *, damping: float = 0.85, tol: float = 1e-3):
+        self.damping = damping
+        self.tol = tol
+
+    def init(self, sg: SemGraph, seeds) -> PRPullState:
+        n = sg.n
+        return PRPullState(
+            rank=jnp.full(n, 1.0 / n),
+            prev=jnp.zeros(n),
+            active=jnp.ones(n, bool),
+            changed=jnp.zeros(n, bool),
+        )
+
+    def frontier(self, sg: SemGraph, s: PRPullState) -> Frontier:
+        return Frontier(x=_out_contrib(sg, s.rank), active=s.active)
+
+    def gather(self, sg, s, fr, policy):
+        # active destinations gather x[src]/deg[src] over ALL in-edges.
+        return traverse(sg, fr.x, fr.active, PLUS_TIMES,
+                        policy=policy.with_(direction="in"))
+
+    def apply(self, sg: SemGraph, s: PRPullState, acc):
+        base = (1.0 - self.damping) / sg.n
+        thresh = self.tol / sg.n
+        new_rank = jnp.where(s.active, base + self.damping * acc, s.rank)
+        changed = s.active & (jnp.abs(new_rank - s.rank) > thresh)
+        return PRPullState(new_rank, s.rank, s.active, changed), changed
+
+    def activate(self, sg: SemGraph, s: PRPullState, policy):
+        # changed vertices multicast activation along their out-edges.
+        woke, io = traverse(sg, s.changed, s.changed, OR_AND,
+                            policy=policy.with_(direction="out"))
+        return s._replace(active=woke), io
+
+    def max_supersteps(self, sg: SemGraph) -> int:
+        return 100
+
+    def finalize(self, sg: SemGraph, s: PRPullState) -> jnp.ndarray:
+        return s.rank
+
+
+class PRPushState(NamedTuple):
+    rank: jnp.ndarray
+    pending: jnp.ndarray  # accumulated residual not yet propagated
+    active: jnp.ndarray
+
+
+class PageRankPushProgram(VertexProgram):
+    """Graphyti's delta PR-push (§4.1): per superstep, only vertices whose
+    rank *changed* beyond the threshold push their delta along out-edges —
+    one chunk pass over the minimal set, versus pull's in-gather over the
+    (larger) activated set plus its activation multicast.
+
+    The policy drives the engine dispatch: ``backend='blocked'`` routes
+    dense multicast supersteps through the Pallas tile kernel,
+    ``chunk_cap`` enables the compact mid-band, and the p2p arm (on by
+    default here, matching Graphyti's hybrid messaging) takes the sparse
+    tail.  ``prepare_policy`` pins the push direction and the historical
+    p2p capacity defaults.
+
+    Same linear iteration as PR-pull (rank_{t+1} = rank_t + c·AᵀD⁻¹·Δ_t),
+    hence the same superstep count and fixed point; only the I/O differs.
+    ``pending`` holds the per-vertex residual: sub-threshold deltas are
+    RETAINED (not dropped) until worth sending, so total mass is conserved
+    and the error stays bounded by thresh/(1-c) per vertex.
+    """
+
+    semiring = PLUS_TIMES
+
+    def __init__(self, *, damping: float = 0.85, tol: float = 1e-3):
+        self.damping = damping
+        self.tol = tol
+
+    def prepare_policy(self, sg: SemGraph, policy: ExecutionPolicy):
+        pol = policy.with_(direction="out")
+        if pol.vcap is None:
+            pol = pol.with_(vcap=sg.n)
+        if pol.ecap is None:
+            pol = pol.with_(ecap=max(4096, sg.m // 8))
+        return pol
+
+    def init(self, sg: SemGraph, seeds) -> PRPushState:
+        base = (1.0 - self.damping) / sg.n
+        return PRPushState(
+            rank=jnp.full(sg.n, base),  # teleport mass, applied
+            pending=jnp.full(sg.n, base),  # ... and pending propagation of it
+            active=jnp.ones(sg.n, bool),
+        )
+
+    def frontier(self, sg: SemGraph, s: PRPushState) -> Frontier:
+        send = jnp.where(s.active, s.pending, 0.0)
+        return Frontier(x=self.damping * _out_contrib(sg, send),
+                        active=s.active)
+
+    def apply(self, sg: SemGraph, s: PRPushState, recv):
+        thresh = self.tol / sg.n
+        send = jnp.where(s.active, s.pending, 0.0)
+        rank = s.rank + recv
+        pending = (s.pending - send) + recv
+        active = jnp.abs(pending) > thresh
+        return PRPushState(rank, pending, active), active
+
+    def max_supersteps(self, sg: SemGraph) -> int:
+        return 100
+
+    def finalize(self, sg: SemGraph, s: PRPushState) -> jnp.ndarray:
+        return s.rank
 
 
 def pagerank_pull(
@@ -61,48 +205,15 @@ def pagerank_pull(
     chunk_cap: int | None = None,
     policy: Optional[ExecutionPolicy] = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
-    """Pregel/Turi-style PR-pull (the paper's baseline, §4.1).
-
-    Per superstep an *activated* vertex (1) gathers the ranks of ALL its
-    in-neighbors — including neighbors that converged long ago, the
-    superfluous reads P1 targets — and (2) if its own rank moved more than
-    the threshold, multicasts an activation to its out-neighbors, which
-    costs a second pass over its out-edge chunks.  Both passes are real
-    chunk I/O, exactly as in FlashGraph where the vertex must read its edge
-    lists to know gather sources and multicast recipients.
-
-    The dataflow directions are fixed by the algorithm (gather is 'in',
-    the activation multicast is 'out'); ``policy`` controls everything
-    else (backend, caps, p2p).
-    """
-    pol = as_policy(policy, _PULL_DEFAULT, backend=backend,
-                    chunk_cap=chunk_cap)
-    n = sg.n
-    base = (1.0 - damping) / n
-    thresh = tol / n
-
-    def step(s: PRState) -> tuple[PRState, jnp.ndarray]:
-        # (1) active destinations gather x[src]/deg[src] over ALL in-edges.
-        x = _out_contrib(sg, s.rank)
-        acc, io = traverse(sg, x, s.active, PLUS_TIMES,
-                           policy=pol.with_(direction="in"))
-        new_rank = jnp.where(s.active, base + damping * acc, s.rank)
-        changed = s.active & (jnp.abs(new_rank - s.rank) > thresh)
-        # (2) changed vertices multicast activation along their out-edges.
-        woke, io2 = traverse(sg, changed, changed, OR_AND,
-                             policy=pol.with_(direction="out"))
-        io = (io + io2)._replace(supersteps=io.supersteps + 1)
-        done = ~jnp.any(changed)
-        return PRState(new_rank, s.rank, woke, s.io + io), done
-
-    s0 = PRState(
-        rank=jnp.full(n, 1.0 / n),
-        aux=jnp.zeros(n),
-        active=jnp.ones(n, bool),
-        io=IOStats.zero(),
-    )
-    s, iters = _run(step, s0, max_iters)
-    return s.rank, s.io, iters
+    """Deprecated shim over :class:`PageRankPullProgram` — use
+    ``repro.Graph.pagerank(mode='pull')``."""
+    pol = legacy_policy("pagerank_pull",
+                        "repro.Graph.pagerank(mode='pull', policy=...)",
+                        policy, _PULL_DEFAULT,
+                        backend=backend, chunk_cap=chunk_cap)
+    res = run_program(sg, PageRankPullProgram(damping=damping, tol=tol), pol,
+                      max_supersteps=max_iters)
+    return res.values, res.iostats, res.supersteps
 
 
 def pagerank_push(
@@ -117,57 +228,14 @@ def pagerank_push(
     chunk_cap: int | None = None,
     policy: Optional[ExecutionPolicy] = None,
 ) -> tuple[jnp.ndarray, IOStats, jnp.ndarray]:
-    """Graphyti's delta PR-push (§4.1): per superstep, only vertices whose
-    rank *changed* beyond the threshold push their delta along out-edges —
-    one chunk pass over the minimal set, versus pull's in-gather over the
-    (larger) activated set plus its activation multicast.
-
-    ``policy`` drives the engine dispatch: ``backend='blocked'`` routes
-    dense multicast supersteps through the Pallas tile kernel,
-    ``chunk_cap`` enables the compact mid-band, and the p2p arm (on by
-    default here, matching Graphyti's hybrid messaging) takes the sparse
-    tail.  The push direction is fixed by the algorithm.
-
-    Same linear iteration as PR-pull (rank_{t+1} = rank_t + c·AᵀD⁻¹·Δ_t),
-    hence the same superstep count and fixed point; only the I/O differs.
-    ``aux`` holds the per-vertex pending delta.
-    """
-    n = sg.n
-    base = (1.0 - damping) / n
-    thresh = tol / n
-    pol = as_policy(policy, None, backend=backend, chunk_cap=chunk_cap,
-                    ecap=ecap, switch_fraction=switch_fraction)
-    pol = pol.with_(direction="out")
-    if pol.vcap is None:
-        pol = pol.with_(vcap=n)
-    if pol.ecap is None:
-        pol = pol.with_(ecap=max(4096, sg.m // 8))
-
-    def step(s: PRState) -> tuple[PRState, jnp.ndarray]:
-        send = jnp.where(s.active, s.aux, 0.0)
-        x = damping * _out_contrib(sg, send)
-        # Graphyti push issues *selective* I/O: row-exact point-to-point
-        # fetches once the frontier is sparse, chunked multicast while
-        # dense (the engine's dispatch).
-        recv, io = traverse(sg, x, s.active, PLUS_TIMES, policy=pol)
-        rank = s.rank + recv
-        # Sub-threshold deltas are RETAINED (not dropped): they accumulate
-        # until worth sending, so total mass is conserved and the error stays
-        # bounded by thresh/(1-c) per vertex.
-        pending = (s.aux - send) + recv
-        active = jnp.abs(pending) > thresh
-        io = io._replace(supersteps=io.supersteps + 1)
-        done = ~jnp.any(active)
-        return PRState(rank, pending, active, s.io + io), done
-
-    s0 = PRState(
-        rank=jnp.full(n, base),  # teleport mass, applied
-        aux=jnp.full(n, base),  # ... and pending propagation of it
-        active=jnp.ones(n, bool),
-        io=IOStats.zero(),
-    )
-    s, iters = _run(step, s0, max_iters)
-    return s.rank, s.io, iters
+    """Deprecated shim over :class:`PageRankPushProgram` — use
+    ``repro.Graph.pagerank()``."""
+    pol = legacy_policy("pagerank_push", "repro.Graph.pagerank(policy=...)",
+                        policy, None, backend=backend, chunk_cap=chunk_cap,
+                        ecap=ecap, switch_fraction=switch_fraction)
+    res = run_program(sg, PageRankPushProgram(damping=damping, tol=tol), pol,
+                      max_supersteps=max_iters)
+    return res.values, res.iostats, res.supersteps
 
 
 def pagerank_inmem(
@@ -197,13 +265,3 @@ def pagerank_inmem(
         cond, step, (jnp.full(n, 1.0 / n), jnp.asarray(jnp.inf), jnp.zeros((), jnp.int32))
     )
     return rank, iters
-
-
-def _run(step, s0, max_iters):
-    def wrapped(carry):
-        s, _ = carry
-        s, done = step(s)
-        return (s, done), done
-
-    (final, _), iters = bsp_run(lambda c: wrapped(c), (s0, jnp.zeros((), bool)), max_iters)
-    return final, iters

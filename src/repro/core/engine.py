@@ -1,19 +1,28 @@
-"""BSP driver, the ExecutionPolicy dispatch stack, and the in-memory baseline.
+"""The ExecutionPolicy dispatch stack, one-superstep traverse, and baselines.
 
 The engine mirrors FlashGraph's execution model:
 
-  * :func:`bsp_run` — the bulk-synchronous loop.  One iteration of the
-    ``lax.while_loop`` is one BSP superstep; the loop exits when the frontier
-    drains (all vertices inactive), i.e. the global barrier condition.
   * :class:`ExecutionPolicy` + :func:`traverse` — ONE object owning every
     execution decision the paper assigns to the framework rather than the
     application (§4.2, "the engine owns I/O minimization"): multicast
     backend, work-list capacities, push/pull direction, and all switch
     thresholds.  Algorithms pass a policy; the engine picks the cheapest
     execution per superstep.
+  * :func:`bsp_run` — the bare bulk-synchronous loop.  One iteration of the
+    ``lax.while_loop`` is one BSP superstep; the loop exits when the frontier
+    drains (all vertices inactive), i.e. the global barrier condition.
   * :func:`flat_spmv` — the *in-memory* baseline: one unchunked segment
     reduction over all m edges, no skipping, no counting.  This is what the
     "SEM achieves 80% of in-memory performance" claim is measured against.
+
+Algorithms do not normally call this module directly: they are
+:class:`~repro.core.program.VertexProgram` instances, and
+:func:`~repro.core.program.run_program` — the library's single BSP driver —
+calls :func:`traverse` once per superstep on their behalf.  ``run_program``
+is also the plug-in point for everything on the ROADMAP (Hilbert tile
+order, multi-device sharding, refined direction gates): a new policy field
+picked up by the dispatch below reaches every algorithm, built-in or
+user-written, with no per-algorithm work.
 
 Four-way dispatch
 -----------------

@@ -1,0 +1,298 @@
+"""The vertex-program layer: write an algorithm, let the engine run it.
+
+This is the user-facing half of the library (Graphyti's pitch: SEM
+performance through an *extensible* vertex-centric interface, not a bag of
+six prebuilt algorithms).  The split of responsibilities:
+
+  * a :class:`VertexProgram` says WHAT one superstep means — which vertices
+    are in the frontier, what values they multicast, how gathered
+    contributions update vertex state, and when the computation has
+    converged;
+  * :func:`run_program` owns HOW supersteps execute — the single
+    ``lax.while_loop`` BSP driver shared by every algorithm.  Per superstep
+    it asks the program for its frontier, executes the multicast through
+    :func:`repro.core.engine.traverse` (so every program inherits the full
+    :class:`~repro.core.engine.ExecutionPolicy` dispatch: push/pull
+    direction optimization, multicast/compact/p2p density switching,
+    blocked Pallas backends, adaptive work-list bucketing), applies the
+    update, accumulates :class:`~repro.core.sem.IOStats`, and tests
+    convergence — all on device, no per-step host round-trip.
+
+Every algorithm in :mod:`repro.algs` is an instance of this protocol; a new
+algorithm is ~30 lines (see ``examples/custom_program.py`` for
+weakly-connected components written purely against the public API).
+
+Protocol
+--------
+Required hooks (all receive the :class:`~repro.core.sem.SemGraph` so state
+can stay minimal)::
+
+    init(sg, seeds) -> state            # build the initial vertex state
+    semiring                            # class attr: the gather reduction
+    frontier(sg, state) -> Frontier     # who multicasts what this superstep
+    apply(sg, state, gathered)          # -> (state', activated)
+    converged(sg, state, activated)     # -> bool[] (default: no activations)
+
+Optional hooks with defaults::
+
+    gather(sg, state, fr, policy)       # default: one traverse() call
+    activate(sg, state, policy)         # post-apply activation multicast
+    prepare_policy(sg, policy)          # pin algorithm-owned policy fields
+    max_supersteps(sg)                  # superstep budget (default n + 1)
+    finalize(sg, state)                 # state -> ProgramResult.values
+
+``gather`` exists because a few dataflows are more than one logical
+multicast per superstep (PR-pull's gather + activation, coreness' skip of
+empty removal rounds, fused betweenness' two phases).  Overriding it keeps
+such programs on the shared driver — the while loop, IOStats ledger,
+convergence, and superstep accounting stay in ONE place.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+import warnings
+
+import jax
+import jax.numpy as jnp
+
+from .engine import ExecutionPolicy, traverse
+from .sem import IOStats, SemGraph
+from .semiring import PLUS_TIMES, Semiring
+
+__all__ = [
+    "Frontier",
+    "ProgramResult",
+    "VertexProgram",
+    "run_program",
+    "warn_legacy",
+    "legacy_policy",
+]
+
+State = Any
+
+
+class Frontier(NamedTuple):
+    """One superstep's logical multicast: ``active`` vertices send ``x``.
+
+    ``unexplored`` (optional bool[n]) marks candidate receivers — supplying
+    it makes the step a *frontier expansion*, which is what lets a
+    ``direction='auto'`` policy run Beamer push<->pull switching (the
+    engine streams the candidates' in-edges when that is cheaper).
+    """
+
+    x: jnp.ndarray
+    active: jnp.ndarray
+    unexplored: Optional[jnp.ndarray] = None
+
+
+class ProgramResult(NamedTuple):
+    """Uniform result of every program (and every ``repro.Graph`` method).
+
+    values: the program's answer (``finalize`` of the final state).
+    supersteps: BSP iterations executed (int32 scalar).
+    iostats: accumulated :class:`~repro.core.sem.IOStats` ledger.
+    state: the full final program state, for programs whose answer has
+      side products (e.g. betweenness levels, fused-BC shared fetches);
+      ``None`` when the values tell the whole story.
+    """
+
+    values: Any
+    supersteps: jnp.ndarray
+    iostats: IOStats
+    state: Any = None
+
+
+class VertexProgram:
+    """Base class / protocol for vertex-centric programs (see module doc).
+
+    Subclasses hold only *configuration* (damping factors, thresholds...);
+    all per-run data lives in the state pytree returned by ``init``, so one
+    program instance can run on any graph, any number of times, inside or
+    outside ``jax.jit``.
+    """
+
+    #: Semiring of the default ``gather`` (y[dst] = combine(edge_op(x, w))).
+    semiring: Semiring = PLUS_TIMES
+    #: Policy used when the caller passes none (``None`` -> ExecutionPolicy()).
+    default_policy: Optional[ExecutionPolicy] = None
+    #: Reverse flow: messages run against the edge direction (BC backward).
+    reverse: bool = False
+    #: Evaluate ``converged`` on the initial state (with ``activated=None``)
+    #: so an already-converged program runs zero supersteps.
+    check_initial_convergence: bool = False
+
+    # ---- required hooks -------------------------------------------------
+    def init(self, sg: SemGraph, seeds) -> State:
+        """Build the initial state pytree (sources, ranks, labels, ...)."""
+        raise NotImplementedError
+
+    def frontier(self, sg: SemGraph, state: State) -> Frontier:
+        """The superstep's multicast: who is active, what values they send."""
+        raise NotImplementedError
+
+    def apply(self, sg: SemGraph, state: State, gathered):
+        """Combine gathered contributions into state.
+
+        Returns ``(state', activated)`` where ``activated`` (bool array) is
+        the set of vertices whose state changed — the default convergence
+        test is "nothing activated".
+        """
+        raise NotImplementedError
+
+    # ---- optional hooks -------------------------------------------------
+    def converged(self, sg: SemGraph, state: State, activated) -> jnp.ndarray:
+        """Scalar bool: stop after this superstep.  Default: no activations.
+
+        Programs setting ``check_initial_convergence`` are called once with
+        ``activated=None`` before the first superstep and must not rely on
+        it.
+        """
+        return ~jnp.any(activated)
+
+    def gather(self, sg: SemGraph, state: State, fr: Frontier,
+               policy: ExecutionPolicy):
+        """Execute the frontier's multicast.  Default: one engine traverse.
+
+        Returns ``(gathered, IOStats)``; ``gathered`` may be any pytree —
+        ``apply`` is its only consumer.
+        """
+        return traverse(sg, fr.x, fr.active, self.semiring, policy=policy,
+                        unexplored=fr.unexplored, reverse=self.reverse)
+
+    def activate(self, sg: SemGraph, state: State, policy: ExecutionPolicy):
+        """Optional post-apply activation multicast (Pregel-style wakeups).
+
+        Returns ``(state', IOStats | None)``.  The default does nothing;
+        PR-pull overrides this with its out-edge activation broadcast.
+        """
+        return state, None
+
+    def prepare_policy(self, sg: SemGraph,
+                       policy: ExecutionPolicy) -> ExecutionPolicy:
+        """Pin the policy fields the algorithm owns (e.g. a fixed dataflow
+        direction, p2p capacity defaults).  Everything else stays the
+        caller's choice."""
+        return policy
+
+    def max_supersteps(self, sg: SemGraph) -> int:
+        """Superstep budget when the caller does not pass one."""
+        return sg.n + 1
+
+    def finalize(self, sg: SemGraph, state: State):
+        """Map the final state to ``ProgramResult.values``."""
+        return state
+
+
+def run_program(
+    sg: SemGraph,
+    prog: VertexProgram,
+    policy: Optional[ExecutionPolicy] = None,
+    *,
+    seeds=None,
+    max_supersteps: Optional[int] = None,
+) -> ProgramResult:
+    """The one BSP driver behind every algorithm (and ``repro.Graph``).
+
+    One iteration of the ``lax.while_loop`` is one superstep::
+
+        fr                = prog.frontier(sg, state)
+        gathered, io_g    = prog.gather(sg, state, fr, policy)   # traverse()
+        state, activated  = prog.apply(sg, state, gathered)
+        state, io_a       = prog.activate(sg, state, policy)
+        done              = prog.converged(sg, state, activated)
+
+    IOStats from every engine call accumulate into one ledger whose
+    ``supersteps`` field counts loop iterations; the returned
+    ``ProgramResult.supersteps`` equals it.  The loop exits when the
+    program reports convergence or the superstep budget is spent.  The
+    whole loop stays on device — no host round-trip per superstep, exactly
+    like FlashGraph keeping the BSP barrier inside the engine.
+
+    ``policy`` falls back to ``prog.default_policy`` then to a plain
+    :class:`ExecutionPolicy`; ``prog.prepare_policy`` then pins the fields
+    the algorithm owns.  ``seeds`` is forwarded verbatim to ``prog.init``.
+    """
+    pol = policy if policy is not None else prog.default_policy
+    pol = pol if pol is not None else ExecutionPolicy()
+    pol = prog.prepare_policy(sg, pol)
+    state0 = prog.init(sg, seeds)
+    budget = max_supersteps if max_supersteps is not None \
+        else prog.max_supersteps(sg)
+
+    def body(carry):
+        state, io, it, _ = carry
+        fr = prog.frontier(sg, state)
+        gathered, st = prog.gather(sg, state, fr, pol)
+        state, activated = prog.apply(sg, state, gathered)
+        state, st_act = prog.activate(sg, state, pol)
+        io = io + st
+        if st_act is not None:  # static: the program either has the hook or not
+            io = io + st_act
+        io = io._replace(supersteps=io.supersteps + 1)
+        done = prog.converged(sg, state, activated)
+        return state, io, it + 1, done
+
+    def cond(carry):
+        _, _, it, done = carry
+        return jnp.logical_and(~done, it < budget)
+
+    done0 = (
+        jnp.asarray(prog.converged(sg, state0, None))
+        if prog.check_initial_convergence
+        else jnp.zeros((), bool)
+    )
+    state, io, iters, _ = jax.lax.while_loop(
+        cond, body, (state0, IOStats.zero(), jnp.zeros((), jnp.int32), done0)
+    )
+    return ProgramResult(prog.finalize(sg, state), iters, io, state)
+
+
+# --------------------------------------------------------------------------
+# the ONE deprecation path for every legacy entry point
+# --------------------------------------------------------------------------
+def warn_legacy(entry: str, replacement: str, *, kwargs: Optional[dict] = None,
+                stacklevel: int = 3) -> None:
+    """Emit the library's single consistent :class:`DeprecationWarning`.
+
+    Every pre-façade entry point (``bfs_multi``, ``pagerank_push/pull``,
+    ``bc_*``, ``coreness``, ``diameter_*``) and every per-algorithm engine
+    kwarg (``backend=``, ``chunk_cap=``, ...) funnels through here, so the
+    message shape — and the filter key users silence — is uniform.
+
+    ``kwargs``: the deprecated keyword arguments the caller *actually
+    passed* (non-``None`` values); they are named in the message with their
+    :class:`~repro.core.engine.ExecutionPolicy` replacement.
+
+    ``stacklevel`` must land the warning on the *user's* call site (the
+    default fits a shim calling this directly; :func:`legacy_policy` adds
+    a frame) — mis-attributed DeprecationWarnings are filtered out by
+    Python's default ``__main__``-only filter and unreachable by
+    module-targeted filterwarnings.
+    """
+    dead = sorted(k for k, v in (kwargs or {}).items() if v is not None)
+    msg = f"{entry} is deprecated; use {replacement}"
+    if dead:
+        msg += (
+            f" (deprecated kwarg{'s' if len(dead) > 1 else ''} "
+            f"{', '.join(dead)}: set the ExecutionPolicy field instead)"
+        )
+    warnings.warn(msg, DeprecationWarning, stacklevel=stacklevel)
+
+
+def legacy_policy(
+    entry: str,
+    replacement: str,
+    policy: Optional[ExecutionPolicy],
+    default: Optional[ExecutionPolicy],
+    **deprecated,
+) -> ExecutionPolicy:
+    """Deprecation-warn + merge a legacy call's kwargs into a policy.
+
+    The merge is :func:`repro.core.engine.as_policy` (explicit ``policy``
+    wins as the base, any non-``None`` deprecated kwarg overrides its
+    field); the warning is :func:`warn_legacy` — one path for all shims.
+    """
+    from .engine import as_policy
+
+    warn_legacy(entry, replacement, kwargs=deprecated, stacklevel=4)
+    return as_policy(policy, default, **deprecated)

@@ -1,9 +1,25 @@
-"""Host-side graph containers and generators."""
+"""Host-side graph containers and generators (+ the session façade).
+
+``Graph`` here is the host CSR *container*; the user-facing session façade
+(lazy device views + algorithm methods) is :class:`repro.Graph`, exported
+from this package as :class:`GraphSession`.
+"""
 from .csr import Graph, degree_order, from_edges, reverse
 from .generators import cycle_graph, erdos_renyi, path_graph, rmat, star_graph
 
+
+def __getattr__(name):
+    # Lazy: session pulls in the engine (which itself imports .csr), so an
+    # eager import here would cycle when repro.core initializes first.
+    if name == "GraphSession":
+        from .session import Graph as GraphSession
+
+        return GraphSession
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 __all__ = [
     "Graph",
+    "GraphSession",
     "cycle_graph",
     "degree_order",
     "erdos_renyi",

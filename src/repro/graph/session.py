@@ -1,0 +1,430 @@
+"""``repro.Graph`` — the library façade (the paper's pip-installable pitch).
+
+One object owns the whole workflow FlashGraph split across utilities: build
+the graph image once (``from_edges`` / ``from_csr``), let the engine build
+and **cache** its device-resident SEM views lazily (chunk stores on first
+use, dense Pallas tile views only when a blocked backend asks, reverse tile
+views only when a reverse flow asks — and each exactly once per session, so
+back-to-back algorithm calls never re-tile the store), and run algorithms —
+the six paper algorithms as methods, any user-defined
+:class:`~repro.core.VertexProgram` through :meth:`Graph.run` — all
+returning a uniform :class:`~repro.core.ProgramResult` and all driven by a
+single :class:`~repro.core.ExecutionPolicy`.
+
+    import numpy as np, repro
+
+    g = repro.Graph.from_edges(src, dst, symmetrize=True)
+    pr = g.pagerank()                       # ProgramResult(values, ...)
+    bf = g.bfs(0, policy=repro.ExecutionPolicy(direction="auto"))
+    cc = g.run(MyProgram())                 # your ~30-line algorithm
+
+The façade adds no execution layer of its own: methods call
+:func:`~repro.core.run_program` on the cached views, so a façade call
+compiles to exactly the same XLA as a hand-driven program
+(``benchmarks/bench_api.py`` holds the <2% overhead gate).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import ExecutionPolicy, IOStats, ProgramResult, SemGraph, run_program
+from ..core.program import VertexProgram
+from ..core.sem import device_graph
+from ..core.semiring import PLUS_TIMES
+# Algorithm imports are eager: a lazy import executed during a user's first
+# jitted façade call would run module bodies inside the trace (and any
+# module-level jnp constant would leak as a tracer).
+from ..algs.betweenness import FusedBCProgram, _bc_sync, _finish
+from ..algs.bfs import BFSProgram
+from ..algs.coreness import CorenessProgram
+from ..algs.diameter import _diameter
+from ..algs.louvain import louvain as _louvain
+from ..algs.pagerank import PageRankPullProgram, PageRankPushProgram
+from ..algs.triangles import TriangleResult, count_triangles
+from . import csr
+
+__all__ = ["Graph"]
+
+_BLOCKED = ("blocked", "blocked_compact")
+
+
+def _i32(value) -> jnp.ndarray:
+    """Host counter -> int32 field, saturating instead of raising.
+
+    The device-side IOStats counters wrap at 2^31 by documented contract;
+    host-side ledgers (triangles, louvain) hold unbounded Python ints, and
+    ``jnp.asarray(big, int32)`` would *crash* where the device path merely
+    degrades — clamp so huge host runs stay usable."""
+    return jnp.asarray(min(int(value), 2**31 - 1), jnp.int32)
+
+
+def _host_result(values, *, supersteps=0, state=None,
+                 requests=0, records=0, bytes_moved=0) -> ProgramResult:
+    """Wrap a host-side algorithm's output in the uniform ProgramResult."""
+    z = jnp.zeros((), jnp.int32)
+    io = IOStats(
+        requests=_i32(requests),
+        records=_i32(records),
+        chunks_skipped=z,
+        messages=z,
+        supersteps=_i32(supersteps),
+        bytes_moved=_i32(bytes_moved),
+    )
+    return ProgramResult(values, _i32(supersteps), io, state)
+
+
+class Graph:
+    """A graph session: host image + lazily cached device views + algorithms.
+
+    Construction does no device work; every SEM view is built on first use
+    and cached for the session's lifetime:
+
+      * the *base* view (edge chunk stores + CSR arrays) on the first
+        algorithm call;
+      * the dense Pallas tile view per tile encoding ('plus_times' /
+        'min_plus' / 'bool') the first time a ``backend='blocked*'``
+        policy needs it;
+      * the transposed tile view the first time a reverse flow
+        (betweenness backward) runs blocked.
+
+    Args:
+      host: the immutable CSR image (:class:`repro.graph.csr.Graph`).
+      chunk_size: SEM edge-chunk size (fetch/skip granularity).
+      bd / bs: dense tile dims for the blocked Pallas backends.
+    """
+
+    def __init__(self, host: csr.Graph, *, chunk_size: int = 4096,
+                 bd: int = 128, bs: int = 128):
+        self._host = host
+        self._chunk_size = chunk_size
+        self._bd, self._bs = bd, bs
+        self._base: Optional[SemGraph] = None
+        self._tiles: dict = {}  # (semiring, reverse) -> BlockedGraph
+        self._views: dict = {}  # (semiring, with_reverse) -> SemGraph
+
+    # ------------------------------------------------------------- build
+    @classmethod
+    def from_edges(
+        cls,
+        src,
+        dst,
+        n: Optional[int] = None,
+        weights=None,
+        *,
+        symmetrize: bool = False,
+        dedup: bool = True,
+        drop_self_loops: bool = True,
+        chunk_size: int = 4096,
+        bd: int = 128,
+        bs: int = 128,
+    ) -> "Graph":
+        """Build a session from a COO edge list (see
+        :func:`repro.graph.csr.from_edges` for the cleaning semantics)."""
+        host = csr.from_edges(
+            src, dst, n=n, weights=weights, symmetrize=symmetrize,
+            dedup=dedup, drop_self_loops=drop_self_loops,
+        )
+        return cls(host, chunk_size=chunk_size, bd=bd, bs=bs)
+
+    @classmethod
+    def from_csr(
+        cls,
+        indptr,
+        indices,
+        weights=None,
+        *,
+        chunk_size: int = 4096,
+        bd: int = 128,
+        bs: int = 128,
+    ) -> "Graph":
+        """Build a session from CSR arrays (out-edges; the in-edge view the
+        pull/auto policies need is derived here, once)."""
+        indptr = np.asarray(indptr, np.int64)
+        indices = np.asarray(indices, np.int32)
+        n = int(indptr.shape[0] - 1)
+        src = np.repeat(np.arange(n, dtype=np.int32), np.diff(indptr))
+        host = csr.from_edges(src, indices, n=n, weights=weights,
+                              dedup=False, drop_self_loops=False)
+        return cls(host, chunk_size=chunk_size, bd=bd, bs=bs)
+
+    # ------------------------------------------------------------- views
+    @property
+    def host(self) -> csr.Graph:
+        """The immutable host CSR image."""
+        return self._host
+
+    @property
+    def n(self) -> int:
+        return self._host.n
+
+    @property
+    def m(self) -> int:
+        return self._host.m
+
+    def __repr__(self) -> str:
+        built = sorted(k for k, v in (("base", self._base),) if v is not None)
+        built += [f"tiles{k}" for k in sorted(self._tiles)]
+        return (f"Graph(n={self.n}, m={self.m}, chunk_size={self._chunk_size},"
+                f" cached={built or 'none'})")
+
+    def device(self, *, blocked: bool = False, blocked_reverse: bool = False,
+               blocked_semiring: str = "plus_times") -> SemGraph:
+        """The cached device-resident SEM view (build-once per session).
+
+        The base view (chunk stores + CSR) is shared by every composed
+        view; blocked tile views are sub-cached per (encoding, direction)
+        so upgrading a view — e.g. a later call needing the reverse tiles —
+        reuses every tile already built.
+
+        Views are built under ``ensure_compile_time_eval``: the session
+        outlives any single trace, so a cache populated during a user's
+        jitted call must hold concrete arrays, not that trace's constants.
+        """
+        if self._base is None:
+            with jax.ensure_compile_time_eval():
+                self._base = device_graph(self._host,
+                                          chunk_size=self._chunk_size)
+        if not blocked and not blocked_reverse:
+            return self._base
+        key = (blocked_semiring, bool(blocked_reverse))
+        if key not in self._views:
+            self._views[key] = dataclasses.replace(
+                self._base,
+                out_blocked=self._tile_view(blocked_semiring, reverse=False),
+                out_blocked_rev=(
+                    self._tile_view(blocked_semiring, reverse=True)
+                    if blocked_reverse else None
+                ),
+            )
+        return self._views[key]
+
+    def _tile_view(self, semiring: str, *, reverse: bool):
+        key = (semiring, reverse)
+        if key not in self._tiles:
+            from ..kernels.spmv import build_blocked
+
+            with jax.ensure_compile_time_eval():
+                self._tiles[key] = build_blocked(
+                    self._host, bd=self._bd, bs=self._bs, direction="out",
+                    semiring=semiring, reverse=reverse,
+                )
+        return self._tiles[key]
+
+    def _sem(self, policy: Optional[ExecutionPolicy], prog=None, *,
+             need_reverse: bool = False) -> SemGraph:
+        """The view a (program, policy) pair needs, built/cached on demand."""
+        if policy is None or policy.backend not in _BLOCKED:
+            return self.device()
+        sr = getattr(prog, "semiring", None) or PLUS_TIMES
+        if sr.name == "or_and":
+            # Boolean frontiers run on plus_times tiles unless real weights
+            # could corrupt the y>0 threshold — then exact occupancy tiles.
+            tile_sr = "bool" if self._host.weights is not None else "plus_times"
+        elif sr.name == "min_plus":
+            tile_sr = "min_plus"
+        else:
+            tile_sr = "plus_times"
+        need_reverse = need_reverse or getattr(prog, "reverse", False)
+        return self.device(blocked=True, blocked_reverse=need_reverse,
+                           blocked_semiring=tile_sr)
+
+    # ------------------------------------------------------------- runner
+    def run(
+        self,
+        program: VertexProgram,
+        *,
+        seeds=None,
+        policy: Optional[ExecutionPolicy] = None,
+        max_supersteps: Optional[int] = None,
+    ) -> ProgramResult:
+        """Run any :class:`~repro.core.VertexProgram` on this graph.
+
+        This is the extension point: the program sees the same engine —
+        and the same cached views — as the built-in algorithms.  See
+        ``examples/custom_program.py`` for a complete ~30-line program.
+        """
+        pol = policy if policy is not None else program.default_policy
+        sem = self._sem(pol, program)
+        return run_program(sem, program, policy, seeds=seeds,
+                           max_supersteps=max_supersteps)
+
+    # ------------------------------------------------------- the library
+    def bfs(
+        self,
+        sources=0,
+        *,
+        policy: Optional[ExecutionPolicy] = None,
+        max_supersteps: Optional[int] = None,
+    ) -> ProgramResult:
+        """(Multi-source) BFS.  ``values``: int32 distances —
+        ``[n]`` for a scalar source, ``[n, K]`` for K sources
+        (:data:`~repro.algs.UNREACHED` where a lane never arrives).
+
+        ``direction='auto'`` policies get Beamer push↔pull switching;
+        blocked backends stream all K lanes through one tile fetch.
+        """
+        scalar = jnp.ndim(sources) == 0
+        seeds = jnp.atleast_1d(jnp.asarray(sources, jnp.int32))
+        prog = BFSProgram()
+        res = run_program(self._sem(policy, prog), prog, policy, seeds=seeds,
+                          max_supersteps=max_supersteps)
+        return res._replace(values=res.values[:, 0] if scalar else res.values)
+
+    def pagerank(
+        self,
+        *,
+        mode: str = "push",
+        damping: float = 0.85,
+        tol: float = 1e-3,
+        max_iters: int = 100,
+        policy: Optional[ExecutionPolicy] = None,
+    ) -> ProgramResult:
+        """PageRank.  ``values``: f32[n] ranks (sum ≈ 1).
+
+        ``mode='push'`` is Graphyti's delta-push (P1: I/O shrinks as ranks
+        converge); ``'pull'`` the Pregel-style baseline it is measured
+        against (§4.1, Fig. 2).
+        """
+        if mode not in ("push", "pull"):
+            raise ValueError(f"unknown pagerank mode {mode!r}")
+        prog = (PageRankPushProgram if mode == "push" else PageRankPullProgram)(
+            damping=damping, tol=tol
+        )
+        return run_program(self._sem(policy, prog), prog, policy,
+                           max_supersteps=max_iters)
+
+    def coreness(
+        self,
+        *,
+        prune: bool = True,
+        messaging: str = "hybrid",
+        policy: Optional[ExecutionPolicy] = None,
+        max_supersteps: Optional[int] = None,
+    ) -> ProgramResult:
+        """k-core decomposition (undirected graphs).  ``values``:
+        int32[n] core numbers.  ``prune``/``messaging`` keep the Fig. 3
+        optimization ladder (P2 + P3)."""
+        prog = CorenessProgram(prune=prune, messaging=messaging)
+        return run_program(self._sem(policy, prog), prog, policy,
+                           max_supersteps=max_supersteps)
+
+    def betweenness(
+        self,
+        sources=None,
+        *,
+        mode: str = "multi",
+        policy: Optional[ExecutionPolicy] = None,
+        max_supersteps: Optional[int] = None,
+    ) -> ProgramResult:
+        """Brandes betweenness centrality from K sources.  ``values``:
+        f32[n] (un-normalized; exact when ``sources`` is every vertex).
+
+        ``sources`` is required: BC state is O(n · K), so the exact-BC
+        choice (``jnp.arange(g.n)`` — O(n²) memory) must be the caller's.
+
+        ``mode``: 'multi' (synchronous multi-source, §4.4), 'uni' (K
+        independent runs, the Fig. 6 baseline), or 'fused' (per-source
+        phase fusion; ``state.shared`` counts fwd/bwd fetches served by
+        one chunk read).  'fused' is a fixed scan-store execution and
+        rejects a ``policy``."""
+        if mode not in ("multi", "uni", "fused"):
+            raise ValueError(f"unknown betweenness mode {mode!r}")
+        if sources is None:
+            raise ValueError(
+                "betweenness() needs explicit sources; pass "
+                "jnp.arange(g.n) for exact BC (O(n^2) state) or a sample "
+                "of pivots for an estimate"
+            )
+        sources = jnp.atleast_1d(jnp.asarray(sources, jnp.int32))
+        if mode == "fused":
+            # Fused BC drives the chunk stores directly (its two-phase
+            # shared-fetch accounting has no blocked form); don't accept a
+            # policy it would silently ignore, don't build tile views.
+            if policy is not None:
+                raise ValueError(
+                    "betweenness(mode='fused') runs the fixed scan-store "
+                    "execution; policy is not supported (use mode='multi')"
+                )
+            res = run_program(self.device(), FusedBCProgram(), seeds=sources,
+                              max_supersteps=max_supersteps)
+            return res._replace(values=_finish(res.values, sources))
+        sem = self._sem(policy, None, need_reverse=True)
+        if mode == "uni":
+            bc = jnp.zeros(self.n)
+            io = IOStats.zero()
+            steps = jnp.zeros((), jnp.int32)
+            for i in range(sources.shape[0]):
+                b, st, it = _bc_sync(sem, sources[i : i + 1],
+                                     max_supersteps, policy)
+                bc, io, steps = bc + b, io + st, steps + it
+            return ProgramResult(bc, steps, io)
+        bc, io, steps = _bc_sync(sem, sources, max_supersteps, policy)
+        return ProgramResult(bc, steps, io)
+
+    def diameter(
+        self,
+        *,
+        num_sources: int = 32,
+        sweeps: int = 2,
+        seed_vertex: Optional[int] = None,
+        mode: str = "multi",
+        policy: Optional[ExecutionPolicy] = None,
+    ) -> ProgramResult:
+        """Pseudo-peripheral diameter estimate (§4.3).  ``values``: int32
+        scalar lower bound on the true diameter (exact on many structured
+        graphs).  ``mode='uni'`` is the no-chunk-sharing baseline."""
+        if mode not in ("multi", "uni"):
+            raise ValueError(f"unknown diameter mode {mode!r}")
+        sem = self._sem(policy, BFSProgram())
+        est, io, steps = _diameter(sem, policy, num_sources=num_sources,
+                                   sweeps=sweeps, seed_vertex=seed_vertex,
+                                   multi=(mode == "multi"))
+        return ProgramResult(est, steps, io)
+
+    def triangles(
+        self,
+        *,
+        variant: str = "restarted",
+        ordered: bool = True,
+        hash_threshold: int = 0,
+        policy: Optional[ExecutionPolicy] = None,
+    ) -> ProgramResult:
+        """Triangle count (undirected graphs, §4.5).  ``values``: int
+        triangle count; ``state``: the full
+        :class:`~repro.algs.TriangleResult` ledger (comparisons, row
+        requests) for the host variants.
+
+        A blocked-backend policy routes to the MXU tile path; anything
+        else runs the host reference intersections (P6a ladder).
+        """
+        r: TriangleResult = count_triangles(
+            self._host, variant=variant, ordered=ordered,
+            hash_threshold=hash_threshold, policy=policy,
+        )
+        return _host_result(
+            r.triangles, state=r, requests=r.row_requests, records=r.records,
+            bytes_moved=r.records * 8,
+        )
+
+    def louvain(
+        self,
+        *,
+        materialize: bool = False,
+        max_levels: int = 10,
+        max_sweeps: int = 10,
+    ) -> ProgramResult:
+        """Louvain modularity (undirected graphs, §4.6).  ``values``:
+        int community label per vertex; ``state``: the full
+        :class:`~repro.algs.LouvainResult` (modularity, levels,
+        bytes_written/gather_ops ledger).  The default is the Graphyti
+        immutable-edge indirection path (P6b: zero edge bytes rewritten).
+        """
+        r = _louvain(self._host, materialize=materialize,
+                     max_levels=max_levels, max_sweeps=max_sweeps)
+        return _host_result(r.comm, supersteps=r.levels, state=r,
+                            bytes_moved=r.bytes_written)

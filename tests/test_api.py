@@ -1,0 +1,349 @@
+"""The public library API: ``repro.Graph`` façade + ``VertexProgram``.
+
+Pinned down here:
+
+  * **Façade parity** — every ``Graph.<alg>()`` method is bitwise-equal
+    (values AND field-for-field IOStats AND superstep counts) to the
+    legacy entry points across all four engine backends: the façade and
+    the deprecated shims both route through ``run_program``, and the
+    session's cached device views must be indistinguishable from freshly
+    built ones.
+  * **run_program semantics** — superstep counts match the pre-refactor
+    hand-rolled loops (the networkx oracles for the values live in
+    ``test_algorithms.py``), and the IOStats ledger's ``supersteps`` field
+    equals the returned count.
+  * **Extensibility** — weakly-connected components written purely
+    against the public API (the ``examples/custom_program.py`` program)
+    runs end-to-end via ``Graph.run()`` and matches networkx.
+  * **Session caching** — back-to-back algorithm calls reuse one SEM
+    view; blocked tile views are built once and shared across composed
+    views (the re-tiling regression guard).
+  * **Deprecation** — every legacy entry point funnels through the single
+    ``warn_legacy`` path, naming its façade replacement (and the
+    deprecated kwargs the caller actually passed).
+"""
+import importlib.util
+import pathlib
+import warnings
+
+import jax.numpy as jnp
+import networkx as nx
+import numpy as np
+import pytest
+
+import repro
+from repro.algs import (
+    bc_fused,
+    bc_multisource,
+    bfs_multi,
+    bfs_uni,
+    coreness,
+    count_triangles,
+    diameter_multisource,
+    louvain,
+    pagerank_pull,
+    pagerank_push,
+)
+from repro.core import ExecutionPolicy, device_graph
+from repro.graph.generators import erdos_renyi, rmat
+
+pytestmark = pytest.mark.kernel
+
+BACKENDS = ("scan", "compact", "blocked", "blocked_compact")
+
+
+def _policy(backend):
+    return ExecutionPolicy(backend=backend, chunk_cap=8,
+                           switch_fraction=None)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    """(host graph, session, legacy SemGraph built the pre-façade way)."""
+    g = rmat(8, edge_factor=8, seed=2, symmetrize=True)
+    session = repro.Graph(g, chunk_size=128, bd=32, bs=32)
+    legacy = device_graph(g, chunk_size=128, blocked=True, bd=32, bs=32,
+                          blocked_reverse=True)
+    return g, session, legacy
+
+
+def assert_io_equal(a, b):
+    """Field-for-field IOStats equality (ints, so bitwise)."""
+    for name, x, y in zip(a._fields, a, b):
+        assert int(x) == int(y), f"IOStats.{name}: {int(x)} != {int(y)}"
+
+
+@pytest.fixture(autouse=True)
+def _silence_legacy():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        yield
+
+
+# ------------------------------------------------------------ parity
+class TestFacadeParity:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_bfs(self, workload, backend):
+        _, session, legacy = workload
+        src = jnp.asarray([0, 5, 17, 99], jnp.int32)
+        pol = _policy(backend)
+        d, io, it = bfs_multi(legacy, src, policy=pol)
+        res = session.bfs(src, policy=pol)
+        assert (np.asarray(d) == np.asarray(res.values)).all()
+        assert_io_equal(io, res.iostats)
+        assert int(it) == int(res.supersteps)
+        assert int(res.iostats.supersteps) == int(res.supersteps)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_pagerank_push(self, workload, backend):
+        _, session, legacy = workload
+        pol = _policy(backend).with_(switch_fraction=0.1)
+        r, io, it = pagerank_push(legacy, tol=1e-4, policy=pol)
+        res = session.pagerank(tol=1e-4, policy=pol)
+        assert (np.asarray(r) == np.asarray(res.values)).all()
+        assert_io_equal(io, res.iostats)
+        assert int(it) == int(res.supersteps)
+
+    @pytest.mark.parametrize("backend", ["scan", "blocked"])
+    def test_pagerank_pull(self, workload, backend):
+        _, session, legacy = workload
+        pol = _policy(backend)
+        r, io, it = pagerank_pull(legacy, tol=1e-4, policy=pol)
+        res = session.pagerank(mode="pull", tol=1e-4, policy=pol)
+        assert (np.asarray(r) == np.asarray(res.values)).all()
+        assert_io_equal(io, res.iostats)
+        assert int(it) == int(res.supersteps)
+
+    @pytest.mark.parametrize("backend", ["scan", "compact"])
+    def test_coreness(self, workload, backend):
+        _, session, legacy = workload
+        pol = _policy(backend).with_(switch_fraction=0.1)
+        c, io, it = coreness(legacy, policy=pol)
+        res = session.coreness(policy=pol)
+        assert (np.asarray(c) == np.asarray(res.values)).all()
+        assert_io_equal(io, res.iostats)
+        assert int(it) == int(res.supersteps)
+
+    @pytest.mark.parametrize("backend", ["scan", "blocked"])
+    def test_betweenness(self, workload, backend):
+        _, session, legacy = workload
+        srcs = jnp.arange(6, dtype=jnp.int32)
+        pol = _policy(backend)
+        b, io, it = bc_multisource(legacy, srcs, policy=pol)
+        res = session.betweenness(srcs, policy=pol)
+        assert (np.asarray(b) == np.asarray(res.values)).all()
+        assert_io_equal(io, res.iostats)
+        assert int(it) == int(res.supersteps)
+
+    def test_betweenness_fused(self, workload):
+        _, session, legacy = workload
+        srcs = jnp.arange(8, dtype=jnp.int32)
+        b, io, it, shared = bc_fused(legacy, srcs)
+        res = session.betweenness(srcs, mode="fused")
+        assert (np.asarray(b) == np.asarray(res.values)).all()
+        assert_io_equal(io, res.iostats)
+        assert int(it) == int(res.supersteps)
+        assert int(shared) == int(res.state.shared)
+
+    def test_diameter(self, workload):
+        _, session, legacy = workload
+        e, io, it = diameter_multisource(legacy, num_sources=4, sweeps=1)
+        res = session.diameter(num_sources=4, sweeps=1)
+        assert int(e) == int(res.values)
+        assert_io_equal(io, res.iostats)
+        assert int(it) == int(res.supersteps)
+
+    def test_direction_auto_parity(self, workload):
+        """The façade composes with direction optimization unchanged."""
+        _, session, legacy = workload
+        pol = ExecutionPolicy(direction="auto", switch_fraction=None)
+        d, io, it = bfs_uni(legacy, 0, policy=pol)
+        res = session.bfs(0, policy=pol)
+        assert (np.asarray(d) == np.asarray(res.values)).all()
+        assert_io_equal(io, res.iostats)
+
+    def test_triangles_and_louvain(self, workload):
+        g, session, _ = workload
+        t = count_triangles(g, variant="restarted", ordered=True)
+        res = session.triangles()
+        assert res.values == t.triangles
+        assert int(res.iostats.requests) == t.row_requests
+        assert res.state == t
+        r = louvain(g, materialize=False)
+        res = session.louvain()
+        assert (np.asarray(res.values) == r.comm).all()
+        assert int(res.supersteps) == r.levels
+        assert int(res.iostats.bytes_moved) == 0
+
+    def test_betweenness_guard_rails(self, workload):
+        _, session, _ = workload
+        with pytest.raises(ValueError, match="sources"):
+            session.betweenness()  # O(n^2) exact BC must be explicit
+        with pytest.raises(ValueError, match="fused"):
+            session.betweenness(jnp.asarray([0], jnp.int32), mode="fused",
+                                policy=ExecutionPolicy(backend="blocked"))
+
+    def test_from_csr_matches_from_host(self, workload):
+        g, session, _ = workload
+        via_csr = repro.Graph.from_csr(g.indptr, g.indices, chunk_size=128)
+        a = session.bfs(3)
+        b = via_csr.bfs(3)
+        assert (np.asarray(a.values) == np.asarray(b.values)).all()
+        assert_io_equal(a.iostats, b.iostats)
+
+
+# ------------------------------------------------------------ extension
+def _load_example():
+    path = (pathlib.Path(__file__).resolve().parents[1] / "examples"
+            / "custom_program.py")
+    spec = importlib.util.spec_from_file_location("custom_program", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+class TestCustomProgram:
+    """The WCC program from examples/ — public API only — via Graph.run."""
+
+    @pytest.fixture(scope="class")
+    def wcc(self):
+        return _load_example().WCCProgram
+
+    def test_matches_networkx(self, wcc):
+        g = erdos_renyi(300, 500, seed=7, symmetrize=True)
+        session = repro.Graph(g, chunk_size=64)
+        res = session.run(wcc())
+        labels = np.asarray(res.values)
+        G = nx.Graph()
+        G.add_nodes_from(range(g.n))
+        G.add_edges_from(zip(*g.edges()))
+        comps = list(nx.connected_components(G))
+        # same partition: every component maps to exactly one label
+        assert len(np.unique(labels)) == len(comps)
+        for comp in comps:
+            assert len(np.unique(labels[list(comp)])) == 1
+        # labels are the component minima (min-semiring fixed point)
+        for comp in comps:
+            assert labels[list(comp)].max() == min(comp)
+
+    def test_policies_compose(self, wcc):
+        """A user program inherits the engine dispatch unchanged."""
+        g = erdos_renyi(200, 600, seed=3, symmetrize=True)
+        session = repro.Graph(g, chunk_size=64)
+        base = session.run(wcc())
+        for pol in (
+            ExecutionPolicy(backend="compact", chunk_cap=4, adaptive_cap=True),
+            ExecutionPolicy(switch_fraction=0.2, vcap=64, ecap=512),
+        ):
+            res = session.run(wcc(), policy=pol)
+            assert (np.asarray(res.values) == np.asarray(base.values)).all()
+            assert int(res.iostats.messages) == int(base.iostats.messages)
+
+    def test_runs_under_jit(self, wcc):
+        import jax
+
+        g = erdos_renyi(120, 300, seed=5, symmetrize=True)
+        session = repro.Graph(g, chunk_size=64)
+        eager = session.run(wcc())
+        sem = session.device()
+        jitted = jax.jit(lambda: repro.run_program(sem, wcc()))()
+        assert (np.asarray(eager.values) == np.asarray(jitted.values)).all()
+
+
+# ------------------------------------------------------------ caching
+class TestSessionCaching:
+    def test_base_view_built_once(self):
+        g = erdos_renyi(100, 300, seed=1, symmetrize=True)
+        session = repro.Graph(g, chunk_size=64)
+        assert session.device() is session.device()
+        session.bfs(0)
+        session.pagerank()
+        assert session.device() is session.device()
+
+    def test_blocked_views_cached_and_shared(self):
+        g = erdos_renyi(100, 300, seed=1, symmetrize=True)
+        session = repro.Graph(g, chunk_size=64, bd=32, bs=32)
+        v1 = session.device(blocked=True)
+        assert session.device(blocked=True) is v1
+        # composed views share the base chunk stores AND the forward tiles
+        v2 = session.device(blocked=True, blocked_reverse=True)
+        assert v2.out_blocked is v1.out_blocked
+        assert v2.out_store is session.device().out_store
+        assert v2.out_blocked_rev is not None
+
+    def test_tiles_built_once(self, monkeypatch):
+        import repro.kernels.spmv as spmv_mod
+
+        g = erdos_renyi(100, 300, seed=1, symmetrize=True)
+        session = repro.Graph(g, chunk_size=64, bd=32, bs=32)
+        calls = []
+        real = spmv_mod.build_blocked
+        monkeypatch.setattr(
+            spmv_mod, "build_blocked",
+            lambda *a, **k: (calls.append(k), real(*a, **k))[1],
+        )
+        pol = ExecutionPolicy(backend="blocked", switch_fraction=None)
+        session.bfs(0, policy=pol)
+        session.bfs(3, policy=pol)
+        session.pagerank(policy=pol)
+        assert len(calls) == 1  # one tile build serves every later call
+
+
+# ------------------------------------------------------------ deprecation
+class TestDeprecation:
+    # pytest.warns installs its own catch_warnings context, so the module's
+    # autouse silencer does not mask these assertions.
+
+    def test_every_legacy_entry_warns(self):
+        g = erdos_renyi(60, 150, seed=2, symmetrize=True)
+        sg = device_graph(g, chunk_size=64)
+        cases = [
+            (lambda: bfs_uni(sg, 0), "bfs_uni"),
+            (lambda: bfs_multi(sg, jnp.asarray([0], jnp.int32)), "bfs_multi"),
+            (lambda: pagerank_push(sg, max_iters=2), "pagerank_push"),
+            (lambda: pagerank_pull(sg, max_iters=2), "pagerank_pull"),
+            (lambda: coreness(sg, max_supersteps=4), "coreness"),
+            (lambda: bc_multisource(sg, jnp.asarray([0], jnp.int32)),
+             "bc_multisource"),
+            (lambda: bc_fused(sg, jnp.asarray([0], jnp.int32)), "bc_fused"),
+            (lambda: diameter_multisource(sg, num_sources=2, sweeps=1),
+             "diameter_multisource"),
+        ]
+        for fn, name in cases:
+            with pytest.warns(DeprecationWarning, match=name):
+                fn()
+
+    def test_warning_attributed_to_caller(self):
+        """stacklevel must land on the USER'S line (else Python's default
+        __main__-only filter hides the warning entirely)."""
+        g = erdos_renyi(60, 150, seed=2, symmetrize=True)
+        sg = device_graph(g, chunk_size=64)
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always", DeprecationWarning)
+            bfs_uni(sg, 0)           # via legacy_policy (extra frame)
+            bc_fused(sg, jnp.asarray([0], jnp.int32))  # via warn_legacy
+        files = [w.filename for w in rec
+                 if issubclass(w.category, DeprecationWarning)]
+        assert files and all(f == __file__ for f in files), files
+
+    def test_deprecated_kwargs_named(self):
+        g = erdos_renyi(60, 150, seed=2, symmetrize=True)
+        sg = device_graph(g, chunk_size=64)
+        with pytest.warns(DeprecationWarning, match="chunk_cap"):
+            bfs_uni(sg, 0, chunk_cap=2)
+        with pytest.warns(DeprecationWarning, match="backend"):
+            pagerank_push(sg, max_iters=2, backend="compact")
+        # the replacement is always named
+        with pytest.warns(DeprecationWarning, match="repro.Graph"):
+            bfs_uni(sg, 0)
+
+    def test_facade_does_not_warn(self):
+        g = erdos_renyi(60, 150, seed=2, symmetrize=True)
+        session = repro.Graph(g, chunk_size=64)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            session.bfs(0)
+            session.pagerank(max_iters=2)
+            session.coreness(max_supersteps=4)
+            session.diameter(num_sources=2, sweeps=1)
+            session.betweenness(jnp.asarray([0], jnp.int32))
