@@ -52,7 +52,9 @@ def sweep(graphs, *, repeats: int = 5, switch_fraction: float = 0.10,
             # is O(vcap + ecap) per superstep, so full-graph caps would
             # charge every sparse superstep the dense price, while caps
             # too small keep the tail (and the pull side's tiny unexplored
-            # set) off the row-exact path entirely.
+            # set) off the row-exact path entirely.  With adaptive_cap the
+            # engine re-buckets below these per superstep (pow2 vcap/ecap
+            # ladders), so they are ceilings now, not the executed sizes.
             pol = ExecutionPolicy(
                 direction=_DIR[mode], backend="compact", chunk_cap=C,
                 adaptive_cap=True, switch_fraction=switch_fraction,

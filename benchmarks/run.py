@@ -42,6 +42,7 @@ BENCHES = [
     "bench_sem_vs_inmem",
     "bench_density",
     "bench_direction",
+    "bench_tile_order",
     "bench_kernels",
 ]
 
@@ -98,6 +99,17 @@ CLAIMS = [
      "Direction changes wall-clock/bytes, never levels or messages (RMAT)"),
     ("direction", "path", "modes_agree", lambda v: v == 1.0,
      "Direction changes wall-clock/bytes, never levels or messages (path)"),
+    ("tile_order", "rmat_hilbert", "x_fetch_reduction_x", lambda v: v >= 4 / 3,
+     "Hilbert tile order cuts x-block DMA re-fetches >=25% on skewed RMAT"),
+    ("tile_order", "rmat_morton", "x_fetch_reduction_x", lambda v: v > 1.1,
+     "Morton (dst-fastest) order also beats destination-sorted streaming"),
+    ("tile_order", "uniform_hilbert", "x_fetch_reduction_x",
+     lambda v: v >= 1.0,
+     "Curve order never fetches MORE x blocks than 'dest' (uniform graph)"),
+    ("tile_order", "rmat", "orders_agree", lambda v: v == 1.0,
+     "Tile order changes the schedule, never values or record/tile bytes"),
+    ("tile_order", "uniform", "orders_agree", lambda v: v == 1.0,
+     "Order-invariance holds on the uniform workload too"),
     ("spmv_kernel", "local_0.05", "tile_skip_ratio", lambda v: v > 0.5,
      "Kernel: frontier block skipping elides most tile DMAs"),
     ("decode_attn_kernel", "window_256_vs_full", "fetch_reduction_x",
@@ -129,7 +141,7 @@ def smoke(json_out: str | None = None) -> int:
     from repro.core import ExecutionPolicy, device_graph
     from repro.graph.generators import path_graph, rmat
 
-    from . import bench_density, bench_direction
+    from . import bench_density, bench_direction, bench_tile_order
     from .common import timeit
 
     t0 = time.time()
@@ -210,13 +222,32 @@ def smoke(json_out: str | None = None) -> int:
     rows += drows2
     dir_ok = all(agree == 1.0 for _, agree in ratios.values())
 
+    # mini tile-order sweep (skewed RMAT): every order must agree bitwise
+    # with 'dest' (values + order-invariant IOStats), and the hilbert
+    # schedule must not fetch MORE x blocks than destination-sorted
+    # streaming — the CI guard that the curve layouts, the accumulate-on-
+    # flush kernel contract, and the x-fetch accounting stay wired.
+    trows, tsum = bench_tile_order.sweep(
+        [("rmat", gd8)], bd=32, bs=32, chunk_size=256, repeats=1,
+        densities=(1.0, 0.25), label="smoke_tile_order",
+    )
+    rows += trows
+    order_ok = (
+        tsum["rmat"]["agree"] == 1.0
+        and tsum["rmat"]["hilbert"] <= tsum["rmat"]["dest"]
+    )
+
     print_rows(rows)
-    ok = err < 1e-5 and bfs_ok and dens_ok and dir_ok and facade_ok
+    ok = (err < 1e-5 and bfs_ok and dens_ok and dir_ok and facade_ok
+          and order_ok)
     print(f"# smoke {'PASS' if ok else 'FAIL'} in {time.time() - t0:.1f}s "
           f"(pagerank maxerr {err:.2g}, bfs equal {bfs_ok}, "
           f"compact sparse speedup {dens_speedup:.1f}x, "
           f"direction modes agree {dir_ok}, "
-          f"facade parity {facade_ok})")
+          f"facade parity {facade_ok}, "
+          f"tile orders agree {order_ok} "
+          f"[hilbert {tsum['rmat']['hilbert']} <= dest "
+          f"{tsum['rmat']['dest']} x-fetches])")
     if json_out:
         _write_json(json_out, rows, ok=ok, mode="smoke")
     return 0 if ok else 1

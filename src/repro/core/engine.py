@@ -89,6 +89,25 @@ The multicast/compact step has four interchangeable executions, selected by
   * ``'blocked_compact'`` — the same kernel on the frontier-compacted
     (permuted, size-bucketed) grid.
 
+**Tile order (locality-aware streaming, blocked backends only).**  The
+blocked kernel holds a single resident x window, so its x-block DMA count
+is a property of the tile *schedule*: under the default ``tile_order=
+'dest'`` (tiles sorted by destination block) the source block changes at
+nearly every step, and on a skewed graph the hub columns' x blocks are
+re-fetched once per destination row they touch.  ``tile_order='hilbert'``
+(or the cheaper ``'morton'``) streams the SAME tiles along a space-filling
+curve over the (dst_block, src_block) grid: consecutive tiles stay
+adjacent in both coordinates, so roughly half the steps reuse the resident
+x block — cache-aware scheduling of edge blocks in the GraphMP sense, not
+just skipping them.  The order changes ONLY the schedule: values, tile
+fetches, records, and bytes are order-invariant (the per-run flush
+accumulates, so a destination block split across several curve runs sums
+to the same result); the one counter that moves is ``IOStats.x_fetches``,
+which ``benchmarks/bench_tile_order.py`` sweeps.  The blocked view must be
+built with the matching order (``device_graph(..., tile_order=...)``);
+``repro.Graph`` sessions key their tile cache by ``(encoding,
+tile_order)`` and handle this automatically.
+
 All backends serve both directions: push keys activity on source
 blocks/chunks and masks inactive senders; pull keys activity on
 destination blocks/chunks and masks inactive receiver rows — row-exact
@@ -172,6 +191,14 @@ class ExecutionPolicy:
       alpha / beta: Beamer's direction-switch thresholds — pull when
         ``m_f * alpha > m_u`` and ``n_f * beta > n`` (defaults follow the
         Beamer paper's (14, 24) neighborhood).
+      tile_order: streaming schedule of the blocked backends' tile grid —
+        'dest' (destination-sorted; one accumulator run per block),
+        'morton' or 'hilbert' (space-filling curve; reuses the resident
+        x block across consecutive tiles, cutting x-block DMA re-fetches
+        on skewed graphs).  Results and all IOStats except ``x_fetches``
+        are order-invariant; the graph's blocked view must be built with
+        the same order (``repro.Graph`` sessions do this automatically).
+        Ignored by the scan/compact backends.
       interpret: force Pallas interpret mode for the blocked backends
         (``None`` = auto: interpret everywhere but real TPUs).
     """
@@ -186,13 +213,21 @@ class ExecutionPolicy:
     compact_fraction: float = 0.5
     alpha: float = 14.0
     beta: float = 24.0
+    tile_order: str = "dest"
     interpret: Optional[bool] = None
 
     def __post_init__(self):
+        from ..kernels.spmv.order import TILE_ORDERS
+
         if self.backend not in ("scan", "compact", "blocked", "blocked_compact"):
             raise ValueError(f"unknown backend {self.backend!r}")
         if self.direction not in ("out", "in", "auto"):
             raise ValueError(f"unknown direction {self.direction!r}")
+        if self.tile_order not in TILE_ORDERS:
+            raise ValueError(
+                f"unknown tile_order {self.tile_order!r}; expected one of "
+                f"{TILE_ORDERS}"
+            )
 
     def with_(self, **kw) -> "ExecutionPolicy":
         """A copy with the given fields replaced."""
@@ -410,6 +445,7 @@ def blocked_backend_spmv(
         messages=jnp.sum(jnp.where(active, deg, 0)).astype(jnp.int32),
         supersteps=jnp.zeros((), jnp.int32),
         bytes_moved=(stats["tiles_fetched"] * tile_bytes).astype(jnp.int32),
+        x_fetches=stats["x_fetches"].astype(jnp.int32),
     )
     return y, st
 
@@ -493,6 +529,23 @@ def _multicast(sg, x, active, sr, *, direction, reverse, y_init, pol):
     equal on both arms — compaction changes wall-clock, never accounting.
     """
     backend = pol.backend
+    if backend in ("blocked", "blocked_compact"):
+        # Resolve the tile view up front: both the capped and uncapped
+        # paths must stream the schedule the policy asked for.
+        bg, active_on, _ = _select_blocked(sg, direction, reverse)
+        if bg is None:
+            raise ValueError(
+                "SemGraph has no blocked views; build with "
+                "device_graph(..., blocked=True)"
+            )
+        have = getattr(bg, "tile_order", "dest")
+        if have != pol.tile_order:
+            raise ValueError(
+                f"policy wants tile_order={pol.tile_order!r} but the "
+                f"graph's blocked view was built with {have!r}; rebuild "
+                "with device_graph(..., tile_order=...) or run through "
+                "repro.Graph, which caches one view per order"
+            )
     if pol.chunk_cap is None and not (
         pol.adaptive_cap and backend in ("scan", "compact")
     ):
@@ -502,12 +555,6 @@ def _multicast(sg, x, active, sr, *, direction, reverse, y_init, pol):
         always_compact = backend == "blocked_compact"
         from ..kernels.spmv import tile_activity
 
-        bg, active_on, _ = _select_blocked(sg, direction, reverse)
-        if bg is None:
-            raise ValueError(
-                "SemGraph has no blocked views; build with "
-                "device_graph(..., blocked=True)"
-            )
         T = bg.num_tiles
         cap = max(1, min(int(pol.chunk_cap), T))
         n_act_tiles = jnp.sum(tile_activity(bg, active, active_on))
@@ -557,6 +604,39 @@ def _multicast(sg, x, active, sr, *, direction, reverse, y_init, pol):
     return jax.lax.cond(use_compact, compact_arm, dense_arm, None)
 
 
+def _adaptive_p2p(sg, x, active, sr, *, direction, y_init, vcap, ecap,
+                  n_act, act_edges):
+    """lax.switch over pow2 (vcap, ecap) capacity pairs: each superstep's
+    sparse arm runs the smallest compiled p2p gather that fits BOTH its
+    live vertex count and its live edge mass — the p2p analogue of
+    ``_adaptive_compact``'s work-list bucketing, sizing per superstep what
+    used to be one static per-graph guess.  The vertex and edge bucket
+    ladders are padded to equal length and climbed together on the max of
+    the two bucket indices, so every branch satisfies both capacities
+    (bucket lists are nondecreasing) with only max(log2 vcap, log2 ecap)
+    compiled variants — not their product.  The p2p gather's IOStats are
+    capacity-invariant once the frontier fits, so re-bucketing changes
+    wall-clock and compile count, never accounting."""
+    vbuckets = pow2_buckets(vcap)
+    ebuckets = pow2_buckets(ecap)
+    k = max(len(vbuckets), len(ebuckets))
+    vbuckets = vbuckets + (vbuckets[-1],) * (k - len(vbuckets))
+    ebuckets = ebuckets + (ebuckets[-1],) * (k - len(ebuckets))
+    idx = jnp.maximum(
+        bucket_index(n_act, vbuckets), bucket_index(act_edges, ebuckets)
+    )
+
+    def make(vc, ec):
+        def branch(_):
+            return p2p_spmv(sg, x, active, sr, direction=direction,
+                            vcap=vc, ecap=ec, y_init=y_init)
+        return branch
+
+    return jax.lax.switch(
+        idx, [make(vbuckets[i], ebuckets[i]) for i in range(k)], None
+    )
+
+
 def _dispatch(sg, x, active, sr, *, direction, reverse, y_init, pol):
     """The density three-way (multicast / compact / p2p) for one direction.
 
@@ -578,6 +658,12 @@ def _dispatch(sg, x, active, sr, *, direction, reverse, y_init, pol):
     )
 
     def sparse(_):
+        # use_p2p proved the frontier fits the static caps, so the
+        # adaptive ladder tops out exactly there and every bucket is safe.
+        if pol.adaptive_cap:
+            return _adaptive_p2p(sg, x, active, sr, direction=direction,
+                                 y_init=y_init, vcap=vcap, ecap=ecap,
+                                 n_act=n_act, act_edges=act_edges)
         return p2p_spmv(
             sg, x, active, sr, direction=direction, vcap=vcap, ecap=ecap,
             y_init=y_init,

@@ -78,6 +78,16 @@ class IOStats(NamedTuple):
       for weighted stores, 4 B/slot for dense f32 tiles, and 1 bit/slot
       for ``bool`` occupancy tiles (shipped as bitmaps).  This is what
       makes the SEM-vs-in-memory claim a *bytes* claim, not a slot count.
+    x_fetches: vertex-state (x) block DMAs issued by the blocked Pallas
+      backends' live tile schedule — the counter
+      ``ExecutionPolicy.tile_order`` exists to minimize (a Hilbert/Morton
+      schedule reuses the resident x window across consecutive tiles; the
+      destination-sorted schedule re-fetches it once per destination row).
+      Zero on the scan/compact/p2p paths, which charge their x reads into
+      ``records``/``bytes_moved`` row-exactly.  Unlike every other field
+      it is schedule-SENSITIVE: two policies differing only in
+      ``tile_order`` report identical requests/records/bytes and differ
+      here alone.
 
     All counters are int32 (JAX's default integer without x64), so each
     wraps at 2^31 of its unit — ~2 GiB for ``bytes_moved``, ~2.1e9 edge
@@ -92,11 +102,12 @@ class IOStats(NamedTuple):
     messages: jnp.ndarray
     supersteps: jnp.ndarray
     bytes_moved: jnp.ndarray
+    x_fetches: jnp.ndarray
 
     @staticmethod
     def zero() -> "IOStats":
         z = jnp.zeros((), dtype=jnp.int32)
-        return IOStats(z, z, z, z, z, z)
+        return IOStats(z, z, z, z, z, z, z)
 
     def __add__(self, other: "IOStats") -> "IOStats":  # type: ignore[override]
         return IOStats(*(a + b for a, b in zip(self, other)))
@@ -228,6 +239,7 @@ def device_graph(
     bd: int = 128,
     bs: int = 128,
     blocked_semiring: str = "plus_times",
+    tile_order: str = "dest",
 ) -> SemGraph:
     """Build the full device-resident SEM view of ``g``.
 
@@ -238,7 +250,11 @@ def device_graph(
     'bool' occupancy tiles for exact or_and on weighted graphs, 'min_plus'
     for shortest-path semirings).  ``blocked_reverse=True`` also builds the
     transposed view needed by reverse flows (betweenness backward) — off by
-    default since it doubles the dense-tile footprint.
+    default since it doubles the dense-tile footprint.  ``tile_order``
+    ('dest' | 'morton' | 'hilbert') picks the tiles' streaming schedule and
+    must match the :class:`~repro.core.engine.ExecutionPolicy.tile_order`
+    of the policies run against the view (``repro.Graph`` sessions key
+    their tile cache by it and handle this automatically).
     """
 
     def _pad_indptr(ip: np.ndarray) -> jnp.ndarray:
@@ -249,12 +265,13 @@ def device_graph(
         from ..kernels.spmv import build_blocked
 
         out_blocked = build_blocked(
-            g, bd=bd, bs=bs, direction="out", semiring=blocked_semiring
+            g, bd=bd, bs=bs, direction="out", semiring=blocked_semiring,
+            tile_order=tile_order,
         )
         if blocked_reverse:
             out_blocked_rev = build_blocked(
                 g, bd=bd, bs=bs, direction="out", semiring=blocked_semiring,
-                reverse=True,
+                reverse=True, tile_order=tile_order,
             )
 
     has_in = g.in_indptr is not None
@@ -435,6 +452,7 @@ def sem_spmv(
                 messages=st.messages + msgs,
                 supersteps=st.supersteps,
                 bytes_moved=st.bytes_moved + store.chunk_size * rec_bytes,
+                x_fetches=st.x_fetches,
             )
             return y, st
 
@@ -528,6 +546,7 @@ def compact_spmv(
             supersteps=jnp.zeros((), jnp.int32),
             bytes_moved=n_act_chunks * store.chunk_size
             * _store_record_bytes(store.w),
+            x_fetches=jnp.zeros((), jnp.int32),
         )
         return y[:n], st
 
@@ -610,5 +629,6 @@ def p2p_spmv(
         messages=total_edges.astype(jnp.int32),
         supersteps=jnp.zeros((), jnp.int32),
         bytes_moved=(total_edges * _store_record_bytes(w)).astype(jnp.int32),
+        x_fetches=jnp.zeros((), jnp.int32),
     )
     return y[:n], st

@@ -74,6 +74,7 @@ def _host_result(values, *, supersteps=0, state=None,
         messages=z,
         supersteps=_i32(supersteps),
         bytes_moved=_i32(bytes_moved),
+        x_fetches=z,
     )
     return ProgramResult(values, _i32(supersteps), io, state)
 
@@ -104,8 +105,8 @@ class Graph:
         self._chunk_size = chunk_size
         self._bd, self._bs = bd, bs
         self._base: Optional[SemGraph] = None
-        self._tiles: dict = {}  # (semiring, reverse) -> BlockedGraph
-        self._views: dict = {}  # (semiring, with_reverse) -> SemGraph
+        self._tiles: dict = {}  # (semiring, reverse, tile_order) -> BlockedGraph
+        self._views: dict = {}  # (semiring, with_reverse, tile_order) -> SemGraph
 
     # ------------------------------------------------------------- build
     @classmethod
@@ -173,13 +174,16 @@ class Graph:
                 f" cached={built or 'none'})")
 
     def device(self, *, blocked: bool = False, blocked_reverse: bool = False,
-               blocked_semiring: str = "plus_times") -> SemGraph:
+               blocked_semiring: str = "plus_times",
+               tile_order: str = "dest") -> SemGraph:
         """The cached device-resident SEM view (build-once per session).
 
         The base view (chunk stores + CSR) is shared by every composed
-        view; blocked tile views are sub-cached per (encoding, direction)
-        so upgrading a view — e.g. a later call needing the reverse tiles —
-        reuses every tile already built.
+        view; blocked tile views are sub-cached per (encoding, direction,
+        tile_order) so upgrading a view — e.g. a later call needing the
+        reverse tiles, or a ``tile_order='hilbert'`` policy after a
+        ``'dest'`` run — reuses every tile view already built and holds
+        exactly one copy per order.
 
         Views are built under ``ensure_compile_time_eval``: the session
         outlives any single trace, so a cache populated during a user's
@@ -191,27 +195,30 @@ class Graph:
                                           chunk_size=self._chunk_size)
         if not blocked and not blocked_reverse:
             return self._base
-        key = (blocked_semiring, bool(blocked_reverse))
+        key = (blocked_semiring, bool(blocked_reverse), tile_order)
         if key not in self._views:
             self._views[key] = dataclasses.replace(
                 self._base,
-                out_blocked=self._tile_view(blocked_semiring, reverse=False),
+                out_blocked=self._tile_view(blocked_semiring, reverse=False,
+                                            tile_order=tile_order),
                 out_blocked_rev=(
-                    self._tile_view(blocked_semiring, reverse=True)
+                    self._tile_view(blocked_semiring, reverse=True,
+                                    tile_order=tile_order)
                     if blocked_reverse else None
                 ),
             )
         return self._views[key]
 
-    def _tile_view(self, semiring: str, *, reverse: bool):
-        key = (semiring, reverse)
+    def _tile_view(self, semiring: str, *, reverse: bool,
+                   tile_order: str = "dest"):
+        key = (semiring, reverse, tile_order)
         if key not in self._tiles:
             from ..kernels.spmv import build_blocked
 
             with jax.ensure_compile_time_eval():
                 self._tiles[key] = build_blocked(
                     self._host, bd=self._bd, bs=self._bs, direction="out",
-                    semiring=semiring, reverse=reverse,
+                    semiring=semiring, reverse=reverse, tile_order=tile_order,
                 )
         return self._tiles[key]
 
@@ -231,7 +238,8 @@ class Graph:
             tile_sr = "plus_times"
         need_reverse = need_reverse or getattr(prog, "reverse", False)
         return self.device(blocked=True, blocked_reverse=need_reverse,
-                           blocked_semiring=tile_sr)
+                           blocked_semiring=tile_sr,
+                           tile_order=policy.tile_order)
 
     # ------------------------------------------------------------- runner
     def run(

@@ -1,5 +1,6 @@
 from .ops import (
     BlockedGraph,
+    TILE_ORDERS,
     blocked_spmv,
     build_blocked,
     compact_grid_size,
@@ -7,17 +8,24 @@ from .ops import (
     default_interpret,
     tile_activity,
     tile_byte_size,
+    x_fetch_count,
 )
+from .order import curve_bits, hilbert_key, morton_key
 from .ref import blocked_spmv_ref
 
 __all__ = [
     "BlockedGraph",
+    "TILE_ORDERS",
     "blocked_spmv",
     "build_blocked",
     "blocked_spmv_ref",
     "compact_grid_size",
     "compact_tile_order",
+    "curve_bits",
     "default_interpret",
+    "hilbert_key",
+    "morton_key",
     "tile_activity",
     "tile_byte_size",
+    "x_fetch_count",
 ]

@@ -10,27 +10,42 @@ combine with neighbor state").  The graph is pre-tiled into dense
 
 SEM mechanics mapped onto Pallas:
 
-  * **Streaming**: tiles are sorted by destination block; the grid walks
-    them in order while Pallas double-buffers the HBM->VMEM DMA of the next
-    tile behind the current matmul — the analogue of SAFS async I/O
-    overlapping compute.
+  * **Streaming**: the grid walks tiles in the schedule the host built
+    (``ops.build_blocked(tile_order=...)`` — destination-sorted or a
+    Morton/Hilbert curve over the tile grid) while Pallas double-buffers
+    the HBM->VMEM DMA of the next tile behind the current matmul — the
+    analogue of SAFS async I/O overlapping compute.  A curve order keeps
+    consecutive tiles adjacent in both block coordinates, so the x window
+    (and soon after, the same accumulator block) is *reused* instead of
+    re-fetched — the GraphMP-style cache-aware schedule.
   * **Chunk-activity skipping** (paper P1, "limit superfluous reads"): the
     per-tile frontier activity bit is scalar-prefetched.  For an inactive
     tile the x-block index map redirects to block 0 (already resident, so
     no new DMA is issued) and ``pl.when`` skips the matmul entirely.
-  * **Contention-free reduction** (paper P5, functional constructs): all
-    tiles of one destination block are contiguous in the grid, so the
-    accumulator lives in a VMEM scratch tile and is flushed exactly once
-    per destination block — no atomics, no message queues.
+  * **Contention-free reduction** (paper P5, functional constructs): tiles
+    of one destination block form contiguous *runs* in the schedule (one
+    run per block under 'dest' order, several under a curve order), so the
+    accumulator lives in a VMEM scratch tile, is zeroed at ``first`` and
+    flushed at ``last`` of each run — no atomics, no message queues.  A
+    run whose block was already flushed (``accum=1``) flushes by combining
+    into ``y`` (``y_ref += acc`` / ``min``); the block's first run
+    overwrites, which is exactly "accumulate into a zero-initialized y"
+    without needing an HBM-cleared output buffer.  Non-consecutive output
+    revisits rely on the revisited block being re-fetched into the output
+    window — exact in interpret mode (every step operates on the real
+    buffer); on a physical TPU the 'dest' order (single visit per block)
+    remains the safe default.
 
 Semirings: ``plus_times`` runs on the MXU (jnp.dot); ``min_plus`` runs on
 the VPU via a broadcast min-plus reduction (same tiling, no MXU analogue).
 
 Grid: 1-D over edge tiles.  Scalar-prefetch operands:
-  dbid[T]  destination block id per tile (sorted ascending)
+  dbid[T]  destination block id per tile (schedule order)
   sbid[T]  source block id per tile
-  first[T] 1 where a tile starts a new destination block
-  last[T]  1 where a tile ends its destination block
+  first[T] 1 where a tile starts a run of its destination block
+  last[T]  1 where a tile ends a run of its destination block
+  accum[T] 1 where the run's flush combines into y (an earlier run of the
+           same destination block already flushed; always 0 under 'dest')
   act[T]   1 where the frontier intersects the tile's source block
 
 Two grid layouts share the kernel bodies:
@@ -40,8 +55,9 @@ Two grid layouts share the kernel bodies:
     but still cost a grid step, so a sparse frontier's wall-clock stays
     O(T).
   * :func:`spmv_pallas_compact` — the frontier-compacted grid: active
-    tiles are permuted to the grid's front (``perm``, stable, so tiles of
-    one destination block stay contiguous), ``first``/``last`` are
+    tiles are permuted to the grid's front (``perm``, stable, so the
+    schedule's run structure is preserved — each surviving run keeps its
+    boundary and accumulation order), ``first``/``last``/``accum`` are
     recomputed over the permuted order, and every step past the live count
     (``t >= nact``) redirects all three index maps at the last active tile
     — the tile, x block, and output block are already resident, so tail
@@ -68,7 +84,7 @@ _NEG = -3.0e38
 
 
 def _kernel_plus_times(
-    dbid, sbid, first, last, act, tiles_ref, x_ref, y_ref, acc_ref
+    dbid, sbid, first, last, accum, act, tiles_ref, x_ref, y_ref, acc_ref
 ):
     t = pl.program_id(0)
 
@@ -83,13 +99,19 @@ def _kernel_plus_times(
             tiles_ref[0], x_ref[0], preferred_element_type=jnp.float32
         )
 
-    @pl.when(last[t] == 1)
+    # Flush the run: the block's first run overwrites (the zero-init of the
+    # accumulate-on-flush contract), later runs combine into y.
+    @pl.when((last[t] == 1) & (accum[t] == 0))
     def _flush():
         y_ref[0] = acc_ref[...].astype(y_ref.dtype)
 
+    @pl.when((last[t] == 1) & (accum[t] == 1))
+    def _flush_combine():
+        y_ref[0] = y_ref[0] + acc_ref[...].astype(y_ref.dtype)
+
 
 def _kernel_min_plus(
-    dbid, sbid, first, last, act, tiles_ref, x_ref, y_ref, acc_ref
+    dbid, sbid, first, last, accum, act, tiles_ref, x_ref, y_ref, acc_ref
 ):
     t = pl.program_id(0)
 
@@ -105,17 +127,22 @@ def _kernel_min_plus(
         cand = jnp.min(w[:, :, None] + x[None, :, :], axis=1)
         acc_ref[...] = jnp.minimum(acc_ref[...], cand)
 
-    @pl.when(last[t] == 1)
+    @pl.when((last[t] == 1) & (accum[t] == 0))
     def _flush():
         y_ref[0] = acc_ref[...].astype(y_ref.dtype)
+
+    @pl.when((last[t] == 1) & (accum[t] == 1))
+    def _flush_combine():
+        y_ref[0] = jnp.minimum(y_ref[0], acc_ref[...].astype(y_ref.dtype))
 
 
 def spmv_pallas(
     tiles: jnp.ndarray,  # [T, Bd, Bs] dense edge tiles
-    dbid: jnp.ndarray,  # [T] int32, sorted ascending
+    dbid: jnp.ndarray,  # [T] int32, schedule order
     sbid: jnp.ndarray,  # [T] int32
-    first: jnp.ndarray,  # [T] int32 0/1
-    last: jnp.ndarray,  # [T] int32 0/1
+    first: jnp.ndarray,  # [T] int32 0/1 — run start
+    last: jnp.ndarray,  # [T] int32 0/1 — run end
+    accum: jnp.ndarray,  # [T] int32 0/1 — run flush combines into y
     act: jnp.ndarray,  # [T] int32 0/1 — frontier hits tile's src block
     x_blocks: jnp.ndarray,  # [nSB, Bs, K] vertex state
     n_dst_blocks: int,
@@ -135,21 +162,25 @@ def spmv_pallas(
     kernel = _kernel_min_plus if semiring == "min_plus" else _kernel_plus_times
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=5,
+        num_scalar_prefetch=6,
         grid=(T,),
         in_specs=[
             pl.BlockSpec(
-                (1, Bd, Bs), lambda t, dbid, sbid, first, last, act: (t, 0, 0)
+                (1, Bd, Bs),
+                lambda t, dbid, sbid, first, last, accum, act: (t, 0, 0),
             ),
             pl.BlockSpec(
                 (1, Bs, K),
                 # redirect to block 0 when inactive: no new DMA is issued for
                 # a block that is already resident.
-                lambda t, dbid, sbid, first, last, act: (act[t] * sbid[t], 0, 0),
+                lambda t, dbid, sbid, first, last, accum, act: (
+                    act[t] * sbid[t], 0, 0,
+                ),
             ),
         ],
         out_specs=pl.BlockSpec(
-            (1, Bd, K), lambda t, dbid, sbid, first, last, act: (dbid[t], 0, 0)
+            (1, Bd, K),
+            lambda t, dbid, sbid, first, last, accum, act: (dbid[t], 0, 0),
         ),
         scratch_shapes=[pltpu.VMEM((Bd, K), jnp.float32)],
     )
@@ -162,11 +193,12 @@ def spmv_pallas(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,
-    )(dbid, sbid, first, last, act, tiles, x_blocks)
+    )(dbid, sbid, first, last, accum, act, tiles, x_blocks)
 
 
 def _kernel_plus_times_compact(
-    perm, dbid, sbid, first, last, nact, tiles_ref, x_ref, y_ref, acc_ref
+    perm, dbid, sbid, first, last, accum, nact, tiles_ref, x_ref, y_ref,
+    acc_ref
 ):
     t = pl.program_id(0)
 
@@ -183,13 +215,18 @@ def _kernel_plus_times_compact(
             tiles_ref[0], x_ref[0], preferred_element_type=jnp.float32
         )
 
-    @pl.when(last[t] == 1)
+    @pl.when((last[t] == 1) & (accum[t] == 0))
     def _flush():
         y_ref[0] = acc_ref[...].astype(y_ref.dtype)
 
+    @pl.when((last[t] == 1) & (accum[t] == 1))
+    def _flush_combine():
+        y_ref[0] = y_ref[0] + acc_ref[...].astype(y_ref.dtype)
+
 
 def _kernel_min_plus_compact(
-    perm, dbid, sbid, first, last, nact, tiles_ref, x_ref, y_ref, acc_ref
+    perm, dbid, sbid, first, last, accum, nact, tiles_ref, x_ref, y_ref,
+    acc_ref
 ):
     t = pl.program_id(0)
 
@@ -204,9 +241,13 @@ def _kernel_min_plus_compact(
         cand = jnp.min(w[:, :, None] + x[None, :, :], axis=1)
         acc_ref[...] = jnp.minimum(acc_ref[...], cand)
 
-    @pl.when(last[t] == 1)
+    @pl.when((last[t] == 1) & (accum[t] == 0))
     def _flush():
         y_ref[0] = acc_ref[...].astype(y_ref.dtype)
+
+    @pl.when((last[t] == 1) & (accum[t] == 1))
+    def _flush_combine():
+        y_ref[0] = jnp.minimum(y_ref[0], acc_ref[...].astype(y_ref.dtype))
 
 
 def spmv_pallas_compact(
@@ -214,8 +255,9 @@ def spmv_pallas_compact(
     perm: jnp.ndarray,  # [G] int32 tile id per grid step (active-compacted)
     dbid: jnp.ndarray,  # [G] int32 dst block per step (permuted order)
     sbid: jnp.ndarray,  # [G] int32 src block per step (permuted order)
-    first: jnp.ndarray,  # [G] int32 0/1 — step starts a dst block (live only)
-    last: jnp.ndarray,  # [G] int32 0/1 — step ends a dst block (live only)
+    first: jnp.ndarray,  # [G] int32 0/1 — step starts a run (live only)
+    last: jnp.ndarray,  # [G] int32 0/1 — step ends a run (live only)
+    accum: jnp.ndarray,  # [G] int32 0/1 — run flush combines into y
     nact: jnp.ndarray,  # [1] int32 — number of live steps
     x_blocks: jnp.ndarray,  # [nSB, Bs, K] vertex state
     n_dst_blocks: int,
@@ -243,21 +285,27 @@ def spmv_pallas_compact(
     G = int(perm.shape[0])
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=6,
+        num_scalar_prefetch=7,
         grid=(G,),
         in_specs=[
             pl.BlockSpec(
                 (1, Bd, Bs),
-                lambda t, perm, dbid, sbid, first, last, nact: (perm[t], 0, 0),
+                lambda t, perm, dbid, sbid, first, last, accum, nact: (
+                    perm[t], 0, 0,
+                ),
             ),
             pl.BlockSpec(
                 (1, Bs, K),
-                lambda t, perm, dbid, sbid, first, last, nact: (sbid[t], 0, 0),
+                lambda t, perm, dbid, sbid, first, last, accum, nact: (
+                    sbid[t], 0, 0,
+                ),
             ),
         ],
         out_specs=pl.BlockSpec(
             (1, Bd, K),
-            lambda t, perm, dbid, sbid, first, last, nact: (dbid[t], 0, 0),
+            lambda t, perm, dbid, sbid, first, last, accum, nact: (
+                dbid[t], 0, 0,
+            ),
         ),
         scratch_shapes=[pltpu.VMEM((Bd, K), jnp.float32)],
     )
@@ -270,4 +318,4 @@ def spmv_pallas_compact(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,
-    )(perm, dbid, sbid, first, last, nact, tiles, x_blocks)
+    )(perm, dbid, sbid, first, last, accum, nact, tiles, x_blocks)

@@ -4,8 +4,22 @@
 dense-tile format the kernel streams: vertices are split into destination
 blocks of ``Bd`` rows and source blocks of ``Bs`` columns; every (dst_block,
 src_block) pair containing at least one edge becomes one dense ``(Bd, Bs)``
-weight tile.  Tiles are sorted by destination block so the kernel's VMEM
-accumulator flushes once per block (contention-free reduction).
+weight tile.
+
+``tile_order`` picks the streaming schedule.  The default ``'dest'`` sorts
+tiles by destination block so each block is one contiguous *run* and the
+kernel's VMEM accumulator flushes once per block.  ``'morton'`` /
+``'hilbert'`` order tiles along a space-filling curve over the
+(dst_block, src_block) grid instead (see :mod:`.order`): consecutive tiles
+stay adjacent in both coordinates, so the single resident x window is
+reused across steps instead of re-fetched once per destination row — the
+locality lever for skewed graphs.  Under a curve order one destination
+block occupies several non-contiguous runs, so ``first``/``last`` are
+per-RUN flags and a run whose block was already flushed carries
+``accum=1``: its flush combines into ``y`` rather than overwriting
+(equivalent to every flush accumulating into a zero-initialized ``y`` —
+the first run's overwrite supplies the zero-init without an HBM-cleared
+output buffer).
 
 This mirrors FlashGraph's edge-page layout: a tile is a "page", the per-tile
 ``sbid`` is the page's vertex range, and the frontier-activity vector decides
@@ -32,9 +46,11 @@ import numpy as np
 
 from ...graph.csr import Graph
 from .kernel import spmv_pallas, spmv_pallas_compact
+from .order import TILE_ORDERS, tile_curve_key
 
 __all__ = [
     "BlockedGraph",
+    "TILE_ORDERS",
     "build_blocked",
     "blocked_spmv",
     "compact_grid_size",
@@ -42,6 +58,7 @@ __all__ = [
     "default_interpret",
     "tile_activity",
     "tile_byte_size",
+    "x_fetch_count",
 ]
 
 
@@ -56,15 +73,19 @@ class BlockedGraph:
     """Dense-tile blocked view of a graph (edges as (Bd, Bs) MXU tiles)."""
 
     tiles: jnp.ndarray  # [T, Bd, Bs] f32 edge weights (0 or +inf = absent)
-    dbid: jnp.ndarray  # [T] int32 destination block ids, sorted
+    dbid: jnp.ndarray  # [T] int32 destination block ids (schedule order)
     sbid: jnp.ndarray  # [T] int32 source block ids
-    first: jnp.ndarray  # [T] int32 — tile starts a new dst block
-    last: jnp.ndarray  # [T] int32 — tile ends its dst block
+    first: jnp.ndarray  # [T] int32 — tile starts a run of its dst block
+    last: jnp.ndarray  # [T] int32 — tile ends a run of its dst block
+    accum: jnp.ndarray  # [T] int32 — run's flush combines into y (block
+    #   already flushed by an earlier run; always 0 under 'dest' order)
     nnz: jnp.ndarray  # [T] int32 — edge records baked into each tile
     n: int = dataclasses.field(metadata=dict(static=True))
     bd: int = dataclasses.field(metadata=dict(static=True))
     bs: int = dataclasses.field(metadata=dict(static=True))
     semiring: str = dataclasses.field(metadata=dict(static=True))
+    tile_order: str = dataclasses.field(metadata=dict(static=True),
+                                        default="dest")
 
     @property
     def num_tiles(self) -> int:
@@ -79,6 +100,31 @@ class BlockedGraph:
         return -(-self.n // self.bs)
 
 
+def _run_flags(dbid: np.ndarray, n_dst_blocks: int):
+    """(first, last, accum) int32 run flags over a tile schedule.
+
+    A *run* is a maximal stretch of consecutive tiles sharing a destination
+    block.  ``first``/``last`` mark run boundaries; ``accum`` marks runs
+    whose block was already flushed by an earlier run, so their flush must
+    combine into ``y`` instead of overwriting.  Under sorted ``'dest'``
+    order every block is exactly one run and ``accum`` is all zero — the
+    historical kernel contract falls out as the special case.
+    """
+    T = len(dbid)
+    first = np.ones(T, np.int32)
+    first[1:] = (dbid[1:] != dbid[:-1]).astype(np.int32)
+    last = np.ones(T, np.int32)
+    last[:-1] = (dbid[1:] != dbid[:-1]).astype(np.int32)
+    starts = np.flatnonzero(first)
+    run_db = dbid[starts].astype(np.int64)
+    n_runs = len(starts)
+    first_run = np.full(max(1, n_dst_blocks), n_runs, np.int64)
+    np.minimum.at(first_run, run_db, np.arange(n_runs))
+    accum_run = (np.arange(n_runs) > first_run[run_db]).astype(np.int32)
+    accum = accum_run[np.cumsum(first) - 1]
+    return first, last, accum
+
+
 def build_blocked(
     g: Graph,
     *,
@@ -87,6 +133,7 @@ def build_blocked(
     direction: str = "out",
     semiring: str = "plus_times",
     reverse: bool = False,
+    tile_order: str = "dest",
 ) -> BlockedGraph:
     """Tile ``g``'s edges into dense (bd, bs) blocks (host side, numpy).
 
@@ -101,7 +148,16 @@ def build_blocked(
     regardless of weights, so boolean (or_and) frontiers are exact even on
     weighted graphs with zero or negative weights.  They run on the
     plus_times kernel.
+
+    ``tile_order`` ('dest' | 'morton' | 'hilbert') picks the streaming
+    schedule — the SAME tiles in a locality-aware order (see the module
+    docstring and :mod:`.order`).  The tile set, activity semantics, and
+    I/O accounting other than the x-fetch counter are order-invariant.
     """
+    if tile_order not in TILE_ORDERS:
+        raise ValueError(
+            f"unknown tile_order {tile_order!r}; expected one of {TILE_ORDERS}"
+        )
     if direction == "out":
         indptr, indices, w = g.indptr, g.indices, g.weights
     else:
@@ -150,21 +206,28 @@ def build_blocked(
                 tiles[t][rows, cols] = 1.0  # occupancy, multi-edges idempotent
             else:
                 np.add.at(tiles[t], (rows, cols), wv[s0:s1])
-    first = np.ones(T, np.int32)
-    first[1:] = (dbid[1:] != dbid[:-1]).astype(np.int32)
-    last = np.ones(T, np.int32)
-    last[:-1] = (dbid[1:] != dbid[:-1]).astype(np.int32)
+    n_dst_blocks = -(-n // bd)
+    if tile_order != "dest" and T > 1:
+        # Re-schedule the SAME tiles along the curve: only the stream order
+        # (and hence the run structure) changes; the tile contents and the
+        # per-tile activity semantics are untouched.
+        ck = tile_curve_key(dbid, sbid, n_dst_blocks, -(-n // bs), tile_order)
+        p = np.argsort(ck, kind="stable")
+        tiles, dbid, sbid, nnz = tiles[p], dbid[p], sbid[p], nnz[p]
+    first, last, accum = _run_flags(dbid, n_dst_blocks)
     return BlockedGraph(
         tiles=jnp.asarray(tiles),
         dbid=jnp.asarray(dbid),
         sbid=jnp.asarray(sbid),
         first=jnp.asarray(first),
         last=jnp.asarray(last),
+        accum=jnp.asarray(accum),
         nnz=jnp.asarray(nnz),
         n=n,
         bd=bd,
         bs=bs,
         semiring=semiring,
+        tile_order=tile_order,
     )
 
 
@@ -172,16 +235,25 @@ def compact_tile_order(bg: BlockedGraph, act_tile: jnp.ndarray):
     """Compact live tiles to the grid front; returns the permuted schedule.
 
     ``act_tile`` (int/bool[T]) is stably compacted — ``nonzero`` yields
-    ascending tile ids, so tiles of one destination block stay contiguous
-    and their accumulation order (hence float rounding) is unchanged.
-    Tail slots (``pos >= nact``) repeat the LAST live tile's coordinates:
-    the tile, its x block, and its output block are all still resident from
-    the previous step, so the tail issues no DMA.  ``first``/``last`` are
-    recomputed over the permuted order and forced to 0 on the tail so the
-    accumulator is neither re-zeroed nor re-flushed.
+    ascending tile ids, so the schedule order (hence per-run float
+    rounding) is unchanged.  Tail slots (``pos >= nact``) repeat the LAST
+    live tile's coordinates: the tile, its x block, and its output block
+    are all still resident from the previous step, so the tail issues no
+    DMA.  ``first``/``last`` are recomputed over the permuted order and
+    forced to 0 on the tail so the accumulator is neither re-zeroed nor
+    re-flushed.
 
-    Returns ``(perm, dbid, sbid, first, last, nact)`` — all int32[T] plus
-    the scalar live count.
+    Run contiguity under curve orders: boundaries key on the ORIGINAL run
+    id (``cumsum(bg.first)``), not on dst-block adjacency — when every
+    tile between two runs of one block goes inactive, the runs become
+    adjacent in the compacted schedule but are NOT merged, so each run
+    accumulates exactly the tiles (in the order) the full grid gave it and
+    the result stays bitwise identical.  ``accum`` is recomputed over the
+    LIVE runs: the first surviving run of each block flushes by overwrite
+    (supplying the zero-init), later ones combine.
+
+    Returns ``(perm, dbid, sbid, first, last, accum, nact)`` — all
+    int32[T] plus the scalar live count.
     """
     T = bg.num_tiles
     act = act_tile.astype(jnp.int32)
@@ -193,12 +265,21 @@ def compact_tile_order(bg: BlockedGraph, act_tile: jnp.ndarray):
     perm = jnp.where(valid, ids, last_live)
     dbid = bg.dbid[perm]
     sbid = bg.sbid[perm]
-    prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), dbid[:-1]])
-    nxt = jnp.concatenate([dbid[1:], jnp.full((1,), -1, jnp.int32)])
-    first = (valid & (dbid != prev)).astype(jnp.int32)
-    # the last live step must flush even though the tail repeats its dbid.
-    last = (valid & ((dbid != nxt) | (pos == nact - 1))).astype(jnp.int32)
-    return perm, dbid, sbid, first, last, nact
+    run = (jnp.cumsum(bg.first) - 1)[perm]  # original run id per step
+    prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), run[:-1]])
+    nxt = jnp.concatenate([run[1:], jnp.full((1,), -1, jnp.int32)])
+    first = (valid & (run != prev)).astype(jnp.int32)
+    # the last live step must flush even though the tail repeats its run.
+    last = (valid & ((run != nxt) | (pos == nact - 1))).astype(jnp.int32)
+    # accum over live runs: a run combines iff an earlier live position
+    # already flushed its dst block (first live position < this run's
+    # start, found via a cummax over run-start positions).
+    first_pos = jnp.full(bg.n_dst_blocks, T, jnp.int32).at[dbid].min(
+        jnp.where(valid, pos, T)
+    )
+    run_start = jax.lax.cummax(jnp.where(first == 1, pos, -1))
+    accum = (valid & (first_pos[dbid] < run_start)).astype(jnp.int32)
+    return perm, dbid, sbid, first, last, accum, nact
 
 
 def compact_grid_size(num_tiles: int, num_active: int) -> int:
@@ -215,7 +296,7 @@ def compact_grid_size(num_tiles: int, num_active: int) -> int:
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def _compact_spmv_jit(bg: BlockedGraph, x_blocks, perm, dbid, sbid, first,
-                      last, nact, interpret: bool):
+                      last, accum, nact, interpret: bool):
     return spmv_pallas_compact(
         bg.tiles,
         perm,
@@ -223,6 +304,7 @@ def _compact_spmv_jit(bg: BlockedGraph, x_blocks, perm, dbid, sbid, first,
         sbid,
         first,
         last,
+        accum,
         nact,
         x_blocks,
         bg.n_dst_blocks,
@@ -239,12 +321,40 @@ def _blocked_spmv_jit(bg: BlockedGraph, x_blocks, act_tile, interpret: bool):
         bg.sbid,
         bg.first,
         bg.last,
+        bg.accum,
         act_tile,
         x_blocks,
         bg.n_dst_blocks,
         semiring=bg.semiring,
         interpret=interpret,
     )
+
+
+def x_fetch_count(sbid: jnp.ndarray, act_tile: jnp.ndarray) -> jnp.ndarray:
+    """int32 scalar: x-block DMAs the LIVE schedule issues.
+
+    The kernel holds a single resident x window, so a DMA fires exactly
+    when consecutive live steps name different source blocks (plus one for
+    the first live step).  This is the fetch count of the compacted grid,
+    which streams the live subsequence verbatim; the full grid's
+    inactive-step index-map redirects to block 0 can add fetches on top,
+    but those are an artifact of the redirect trick, not of the schedule —
+    the counter charges the schedule so the full and compacted executions
+    of one (order, frontier) pair report the same number, and only the
+    tile ORDER moves it.  This is the quantity ``tile_order`` exists to
+    minimize (``benchmarks/bench_tile_order.py`` sweeps it).
+    """
+    T = int(sbid.shape[0])
+    act = act_tile.astype(bool)
+    pos = jnp.arange(T, dtype=jnp.int32)
+    # index of the previous live step (exclusive), -1 when none yet.
+    prev_live = jax.lax.cummax(jnp.where(act, pos, -1))
+    prev_live = jnp.concatenate(
+        [jnp.full((1,), -1, jnp.int32), prev_live[:-1]]
+    )
+    prev_sb = sbid[jnp.maximum(prev_live, 0)]
+    fetch = act & ((prev_live < 0) | (sbid != prev_sb))
+    return jnp.sum(fetch.astype(jnp.int32))
 
 
 def tile_activity(
@@ -326,11 +436,23 @@ def blocked_spmv(
     Returns:
       (y [n] or [n, K] f32, stats) — stats counts fetched/skipped tiles,
       tile bytes moved (layout-aware: f32 slots, or 1/32 of that for
-      'bool' bitmap tiles), and the edge records resident in fetched tiles
-      (``messages`` — block-granular, so >= the row-exact count), the
+      'bool' bitmap tiles), the edge records resident in fetched tiles
+      (``messages`` — block-granular, so >= the row-exact count), and the
+      x-block DMA count of the live schedule (``x_fetches`` — the ONE
+      counter ``bg.tile_order`` moves; see :func:`x_fetch_count`), the
       kernel-path analogue of ``core.sem.IOStats``.  Identical across the
       full and compacted grids.
     """
+    if not interpret and bg.tile_order != "dest":
+        # The accumulate-on-flush read of a revisited output block is exact
+        # in interpret mode (every step operates on the real buffer) but is
+        # NOT yet validated against Mosaic's output-window pipelining on
+        # physical TPUs — refuse rather than risk silently stale reads.
+        raise ValueError(
+            f"tile_order={bg.tile_order!r} is only supported in interpret "
+            "mode for now (compiled TPU output-window revisits are "
+            "unvalidated); use tile_order='dest' or interpret=True"
+        )
     squeeze = x.ndim == 1
     if squeeze:
         x = x[:, None]
@@ -348,15 +470,14 @@ def blocked_spmv(
 
     ident_out = jnp.inf if bg.semiring == "min_plus" else 0.0
     if compact:
-        perm, dbid_p, sbid_p, first_p, last_p, nact = compact_tile_order(
-            bg, act_tile
-        )
+        (perm, dbid_p, sbid_p, first_p, last_p, accum_p,
+         nact) = compact_tile_order(bg, act_tile)
         T = bg.num_tiles
 
         def _run_grid(G):
             return _compact_spmv_jit(
                 bg, x_blocks, perm[:G], dbid_p[:G], sbid_p[:G], first_p[:G],
-                last_p[:G], jnp.reshape(nact, (1,)), interpret,
+                last_p[:G], accum_p[:G], jnp.reshape(nact, (1,)), interpret,
             )
 
         if not isinstance(nact, jax.core.Tracer):
@@ -403,5 +524,8 @@ def blocked_spmv(
         "tiles_skipped": bg.num_tiles - fetched,
         "tile_bytes": fetched * tile_byte_size(bg),
         "messages": jnp.sum(bg.nnz * act_tile),
+        # order-sensitive: everything above is a per-tile sum (invariant
+        # under the schedule permutation); this one is what tile_order buys.
+        "x_fetches": x_fetch_count(bg.sbid, act_tile),
     }
     return y, stats

@@ -1,0 +1,393 @@
+"""Tile-order (Hilbert/Morton curve streaming) correctness + invariants.
+
+The acceptance contract of ``ExecutionPolicy.tile_order``: a curve order
+changes the blocked backends' streaming SCHEDULE and nothing else —
+
+  * values are bitwise-equal to ``'dest'`` order (gated here on workloads
+    whose f32 arithmetic is exact: boolean BFS frontiers, min_plus
+    distances, and small-integer plus_times masses — float reorderings of
+    inexact sums are checked to 1e-6 via PageRank instead);
+  * every :class:`~repro.core.sem.IOStats` field except the new
+    ``x_fetches`` counter is order-invariant (requests / records / skips /
+    messages / bytes are per-tile sums; only the schedule-sensitive x-DMA
+    count may move, and on skewed graphs it must move DOWN);
+  * the compacted grid stays bitwise-identical to the full grid under
+    every order (run boundaries key on original run ids, so runs are
+    never merged by compaction);
+  * the generalized ``first``/``last``/``accum`` flags keep their run
+    invariants: one ``first`` and one ``last`` per run, constant dbid
+    within a run, ``accum=0`` exactly on each block's first run, and
+    all-zero ``accum`` under sorted 'dest' order;
+  * curve keys are bijections on the pow2 grid, Hilbert consecutive cells
+    are Manhattan-adjacent, and the Morton key varies fastest along the
+    destination axis (the move that keeps the x block resident).
+
+Also here: the direction-aware p2p capacity buckets (``adaptive_cap``
+now re-buckets the sparse arm's vcap/ecap per superstep) must be a pure
+wall-clock lever — bitwise values, field-for-field IOStats.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import MIN_PLUS, OR_AND, PLUS_TIMES, device_graph, spmv
+from repro.core.engine import ExecutionPolicy, traverse
+from repro.graph.generators import path_graph, rmat
+from repro.kernels.spmv import (
+    TILE_ORDERS,
+    blocked_spmv,
+    build_blocked,
+    compact_tile_order,
+    curve_bits,
+    hilbert_key,
+    morton_key,
+    tile_activity,
+    x_fetch_count,
+)
+
+pytestmark = pytest.mark.kernel
+
+BACKENDS = ("scan", "compact", "blocked", "blocked_compact")
+CURVES = ("morton", "hilbert")
+
+
+@pytest.fixture(scope="module")
+def host_g():
+    # Skewed (RMAT) so the hub columns recur across destination rows —
+    # the regime a curve order exists for.
+    return rmat(8, edge_factor=8, seed=3, symmetrize=True)
+
+
+@pytest.fixture(scope="module")
+def session(host_g):
+    return repro.Graph(host_g, chunk_size=256, bd=32, bs=32)
+
+
+def _io_equal_but_x(a, b):
+    for name, x, y in zip(a._fields, a, b):
+        if name == "x_fetches":
+            continue
+        assert int(x) == int(y), f"IOStats.{name}: {int(x)} != {int(y)}"
+
+
+# ------------------------------------------------------- curve invariants
+@pytest.mark.parametrize("bits", [1, 2, 3, 5])
+def test_hilbert_bijective_and_adjacent(bits):
+    n = 1 << bits
+    db, sb = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+    d = hilbert_key(db.ravel(), sb.ravel(), bits)
+    assert sorted(d) == list(range(n * n))
+    order = np.argsort(d)
+    xs, ys = db.ravel()[order], sb.ravel()[order]
+    assert (np.abs(np.diff(xs)) + np.abs(np.diff(ys)) == 1).all()
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 5])
+def test_morton_bijective_dst_fastest(bits):
+    n = 1 << bits
+    db, sb = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+    m = morton_key(db.ravel(), sb.ravel(), bits)
+    assert sorted(m) == list(range(n * n))
+    # db on the low bits: within a quad the first move is along db,
+    # keeping sb (the x block) resident.
+    assert morton_key(np.asarray([1]), np.asarray([0]), bits)[0] == 1
+    assert morton_key(np.asarray([0]), np.asarray([1]), bits)[0] == 2
+
+
+def test_curve_bits_covers_grid():
+    assert curve_bits(5, 9) == 4  # side 9 -> 16
+    assert curve_bits(1, 1) == 1  # degenerate grids still get a 2x2 curve
+
+
+# ------------------------------------------------- run-flag invariants
+@pytest.mark.parametrize("order", TILE_ORDERS)
+def test_run_flags_invariants(host_g, order):
+    bg = build_blocked(host_g, bd=32, bs=32, tile_order=order)
+    dbid = np.asarray(bg.dbid)
+    sbid = np.asarray(bg.sbid)
+    first = np.asarray(bg.first)
+    last = np.asarray(bg.last)
+    accum = np.asarray(bg.accum)
+    # runs tile the schedule: starts and ends pair up and alternate.
+    assert first[0] == 1 and last[-1] == 1
+    assert first.sum() == last.sum()
+    assert (first[1:] == last[:-1]).all()  # a run ends iff the next starts
+    # dbid constant within a run, changes across run boundaries.
+    inner = first[1:] == 0
+    assert (dbid[1:][inner] == dbid[:-1][inner]).all()
+    bound = first[1:] == 1
+    assert (dbid[1:][bound] != dbid[:-1][bound]).all()
+    # accum: 0 exactly on each block's first run, 1 on every later run.
+    starts = np.flatnonzero(first)
+    seen = set()
+    for s in starts:
+        expected = 1 if dbid[s] in seen else 0
+        assert accum[s] == expected, f"run at {s}"
+        seen.add(dbid[s])
+    # accum constant within runs.
+    assert (accum[1:][inner] == accum[:-1][inner]).all()
+    if order == "dest":
+        # sorted order: one run per block, nothing ever re-flushes.
+        assert (accum == 0).all()
+        assert (np.diff(dbid) >= 0).all()
+    else:
+        # the same tile multiset, re-scheduled.
+        ref = build_blocked(host_g, bd=32, bs=32)
+        assert sorted(zip(dbid, sbid)) == sorted(
+            zip(np.asarray(ref.dbid), np.asarray(ref.sbid))
+        )
+        assert int(bg.nnz.sum()) == int(ref.nnz.sum())
+        # skewed RMAT: curve orders must create re-flushed runs (else the
+        # accumulate-on-flush contract is dead code in this test).
+        assert accum.sum() > 0
+
+
+@pytest.mark.parametrize("order", TILE_ORDERS)
+def test_compact_order_preserves_runs(host_g, order):
+    """Compacted first/last/accum mark ORIGINAL run boundaries: runs whose
+    neighbors die are not merged, and accum re-derives over live runs."""
+    bg = build_blocked(host_g, bd=32, bs=32, tile_order=order)
+    rng = np.random.default_rng(7)
+    act = jnp.asarray((rng.random(bg.num_tiles) < 0.5).astype(np.int32))
+    perm, dbid, sbid, first, last, accum, nact = jax.jit(
+        lambda a: compact_tile_order(bg, a)
+    )(act)
+    na = int(nact)
+    perm, dbid, first, last, accum = (
+        np.asarray(perm), np.asarray(dbid), np.asarray(first),
+        np.asarray(last), np.asarray(accum),
+    )
+    # live prefix is exactly the live tiles, in schedule order.
+    assert np.array_equal(perm[:na], np.flatnonzero(np.asarray(act)))
+    # tail carries no flags.
+    assert first[na:].sum() == last[na:].sum() == accum[na:].sum() == 0
+    # each live step's run id comes from the original schedule; boundaries
+    # in the compacted order appear exactly where the run id changes.
+    run_full = np.cumsum(np.asarray(bg.first)) - 1
+    rid = run_full[perm[:na]]
+    expect_first = np.ones(na, np.int64)
+    expect_first[1:] = rid[1:] != rid[:-1]
+    assert np.array_equal(first[:na], expect_first)
+    expect_last = np.ones(na, np.int64)
+    expect_last[:-1] = rid[1:] != rid[:-1]
+    assert np.array_equal(last[:na], expect_last)
+    # accum over LIVE runs: first surviving run of each block overwrites.
+    seen = set()
+    for t in range(na):
+        if expect_first[t]:
+            assert accum[t] == (1 if dbid[t] in seen else 0), f"step {t}"
+            seen.add(dbid[t])
+
+
+# ------------------------------------------------------------ parity
+@pytest.mark.parametrize("order", TILE_ORDERS)
+@pytest.mark.parametrize("semiring", ["plus_times", "min_plus", "bool"])
+def test_blocked_orders_bitwise_and_compact_parity(host_g, order, semiring):
+    """Exact workloads: every order, full AND compacted grid, equals the
+    'dest' full grid bit for bit; stats differ only in x_fetches."""
+    bg = build_blocked(host_g, bd=32, bs=32, semiring=semiring,
+                       tile_order=order)
+    ref = build_blocked(host_g, bd=32, bs=32, semiring=semiring)
+    rng = np.random.default_rng(11)
+    # small integers: f32 sums/mins of these are exact, so reordering the
+    # accumulation tree cannot move a single bit.
+    x = jnp.asarray(rng.integers(0, 8, host_g.n).astype(np.float32))
+    act = jnp.asarray(rng.random(host_g.n) < 0.4)
+    y_ref, s_ref = blocked_spmv(ref, x, act, interpret=True)
+    y_full, s_full = blocked_spmv(bg, x, act, interpret=True)
+    y_cmp, s_cmp = blocked_spmv(bg, x, act, interpret=True, compact=True)
+    assert np.array_equal(np.asarray(y_full), np.asarray(y_ref))
+    assert np.array_equal(np.asarray(y_cmp), np.asarray(y_full))
+    for k in ("tiles_fetched", "tiles_skipped", "tile_bytes", "messages"):
+        assert int(s_full[k]) == int(s_ref[k]), k
+        assert int(s_cmp[k]) == int(s_full[k]), k
+    # x_fetches is schedule-based: identical across full/compacted grids.
+    assert int(s_cmp["x_fetches"]) == int(s_full["x_fetches"])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("order", CURVES)
+def test_bfs_bitwise_across_orders(session, backend, order):
+    """Multi-source BFS levels AND full IOStats (except x_fetches) are
+    bitwise-equal to 'dest' on every backend."""
+    src = jnp.asarray([0, 5, 17, 99], jnp.int32)
+    mk = lambda o: ExecutionPolicy(backend=backend, tile_order=o,
+                                   switch_fraction=None, chunk_cap=16)
+    base = jax.jit(lambda: session.bfs(src, policy=mk("dest")))()
+    res = jax.jit(lambda: session.bfs(src, policy=mk(order)))()
+    assert np.array_equal(np.asarray(res.values), np.asarray(base.values))
+    _io_equal_but_x(res.iostats, base.iostats)
+    assert int(res.supersteps) == int(base.supersteps)
+    if backend in ("blocked", "blocked_compact"):
+        # skewed graph: the curve must not cost MORE x DMAs than 'dest'.
+        assert int(res.iostats.x_fetches) <= int(base.iostats.x_fetches)
+    else:
+        # scan paths never touch tiles; the counter stays zero.
+        assert int(res.iostats.x_fetches) == int(base.iostats.x_fetches) == 0
+
+
+@pytest.mark.parametrize("order", CURVES)
+def test_pagerank_orders_close(session, order):
+    """Inexact f32 masses: reordering moves bits, not answers."""
+    base = session.pagerank(tol=1e-4, policy=ExecutionPolicy(backend="blocked"))
+    res = session.pagerank(
+        tol=1e-4, policy=ExecutionPolicy(backend="blocked", tile_order=order)
+    )
+    np.testing.assert_allclose(np.asarray(res.values),
+                               np.asarray(base.values), atol=1e-6, rtol=1e-6)
+    _io_equal_but_x(res.iostats, base.iostats)
+
+
+@pytest.mark.parametrize("order", CURVES)
+def test_min_plus_reverse_and_pull_orders(host_g, order):
+    """min_plus tiles, pull direction, and the reverse view all stream the
+    curve schedule bitwise-identically ('dest' as oracle)."""
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.integers(0, 16, host_g.n).astype(np.float32))
+    act = jnp.asarray(rng.random(host_g.n) < 0.5)
+    for kwargs in (dict(blocked_semiring="min_plus"),
+                   dict(blocked_semiring="plus_times")):
+        sg_d = device_graph(host_g, chunk_size=256, blocked=True,
+                            blocked_reverse=True, bd=32, bs=32, **kwargs)
+        sg_c = device_graph(host_g, chunk_size=256, blocked=True,
+                            blocked_reverse=True, bd=32, bs=32,
+                            tile_order=order, **kwargs)
+        sr = MIN_PLUS if kwargs["blocked_semiring"] == "min_plus" else PLUS_TIMES
+        for call in (
+            dict(direction="out"), dict(direction="in"),
+            dict(direction="out", reverse=True),
+        ):
+            y_d, st_d = spmv(sg_d, x, act, sr, backend="blocked", **call)
+            y_c, st_c = spmv(sg_c, x, act, sr, backend="blocked", **call)
+            assert np.array_equal(np.asarray(y_d), np.asarray(y_c)), call
+            _io_equal_but_x(st_c, st_d)
+
+
+def test_x_fetch_count_model():
+    """Hand-checkable schedule: fetch fires on the first live step and on
+    every live-to-live source-block change; dead steps never fetch."""
+    sbid = jnp.asarray([2, 2, 3, 3, 2, 2], jnp.int32)
+    assert int(x_fetch_count(sbid, jnp.ones(6, jnp.int32))) == 3  # 2,3,2
+    act = jnp.asarray([0, 1, 0, 1, 1, 0], jnp.int32)
+    # live subsequence: sb 2, 3, 2 -> 3 fetches.
+    assert int(x_fetch_count(sbid, act)) == 3
+    act2 = jnp.asarray([1, 1, 0, 0, 1, 1], jnp.int32)
+    # live subsequence: 2, 2, 2, 2 -> a single fetch.
+    assert int(x_fetch_count(sbid, act2)) == 1
+    assert int(x_fetch_count(sbid, jnp.zeros(6, jnp.int32))) == 0
+
+
+def test_hilbert_reduces_x_fetches_on_skew(host_g):
+    """The acceptance direction: >= 25% fewer x-block DMAs than 'dest' on
+    the skewed graph, full frontier."""
+    fetches = {}
+    for order in TILE_ORDERS:
+        bg = build_blocked(host_g, bd=32, bs=32, tile_order=order)
+        _, s = blocked_spmv(bg, jnp.ones(host_g.n), None, interpret=True)
+        fetches[order] = int(s["x_fetches"])
+    assert fetches["hilbert"] <= 0.75 * fetches["dest"], fetches
+    assert fetches["morton"] <= 0.75 * fetches["dest"], fetches
+
+
+def test_policy_validates_tile_order():
+    with pytest.raises(ValueError, match="tile_order"):
+        ExecutionPolicy(tile_order="zorder")
+    with pytest.raises(ValueError, match="tile_order"):
+        build_blocked(path_graph(8), bd=4, bs=4, tile_order="snake")
+
+
+def test_curve_orders_refuse_compiled_tpu_path():
+    """The accumulate-on-flush output revisit is validated only in
+    interpret mode; the compiled path must refuse curve orders loudly
+    instead of risking stale output-window reads on real hardware."""
+    bg = build_blocked(path_graph(64), bd=8, bs=8, tile_order="hilbert")
+    with pytest.raises(ValueError, match="interpret"):
+        blocked_spmv(bg, jnp.ones(64), None, interpret=False)
+    # 'dest' keeps the historical single-visit contract: no refusal.
+    bg_d = build_blocked(path_graph(64), bd=8, bs=8)
+    assert bg_d.tile_order == "dest"
+
+
+def test_engine_rejects_mismatched_view(host_g):
+    sg = device_graph(host_g, chunk_size=256, blocked=True, bd=32, bs=32)
+    pol = ExecutionPolicy(backend="blocked", tile_order="hilbert",
+                          switch_fraction=None)
+    with pytest.raises(ValueError, match="tile_order"):
+        traverse(sg, jnp.ones(host_g.n), jnp.ones(host_g.n, bool),
+                 PLUS_TIMES, policy=pol)
+
+
+def test_session_caches_one_view_per_order(host_g, monkeypatch):
+    """The session builds each (encoding, order) tile view exactly once and
+    holds one copy per order."""
+    s = repro.Graph(host_g, chunk_size=256, bd=32, bs=32)
+    import repro.graph.session as session_mod
+    from repro.kernels import spmv as spmv_mod
+
+    calls = []
+    real = spmv_mod.build_blocked
+
+    def counting(*a, **kw):
+        calls.append(kw.get("tile_order", "dest"))
+        return real(*a, **kw)
+
+    monkeypatch.setattr(spmv_mod, "build_blocked", counting)
+    src = jnp.asarray([0, 3], jnp.int32)
+    for order in ("hilbert", "dest", "hilbert", "morton", "hilbert"):
+        pol = ExecutionPolicy(backend="blocked", tile_order=order,
+                              switch_fraction=None)
+        s.bfs(src, policy=pol)
+    assert sorted(calls) == ["dest", "hilbert", "morton"]
+    assert sorted(s._tiles) == [
+        ("plus_times", False, "dest"),
+        ("plus_times", False, "hilbert"),
+        ("plus_times", False, "morton"),
+    ]
+
+
+# ------------------------------------------- adaptive p2p capacity buckets
+@pytest.mark.parametrize("gname", ["rmat", "path"])
+def test_adaptive_p2p_buckets_bitwise(gname):
+    """Re-bucketing the sparse arm's vcap/ecap per superstep is a pure
+    wall-clock lever: values, supersteps, and every IOStats field equal the
+    static-cap run on both a ballooning (rmat) and a trickling (path)
+    frontier."""
+    from repro.algs import bfs_uni
+
+    g = (rmat(8, edge_factor=8, seed=5, symmetrize=True) if gname == "rmat"
+         else path_graph(512))
+    sg = device_graph(g, chunk_size=64)
+    out = {}
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        for adaptive in (False, True):
+            pol = ExecutionPolicy(
+                direction="auto", backend="compact",
+                chunk_cap=sg.out_store.num_chunks, adaptive_cap=adaptive,
+                switch_fraction=0.10, vcap=max(64, sg.n // 4),
+                ecap=max(256, int(sg.m) // 10),
+            )
+            d, io, it = jax.jit(lambda p=pol: bfs_uni(sg, 0, policy=p))()
+            out[adaptive] = (np.asarray(d), tuple(int(v) for v in io), int(it))
+    assert np.array_equal(out[True][0], out[False][0])
+    assert out[True][1] == out[False][1]
+    assert out[True][2] == out[False][2]
+
+
+def test_adaptive_p2p_single_vertex_frontier():
+    """The smallest bucket (vcap=1 band) is actually exercised and exact."""
+    g = path_graph(256)
+    sg = device_graph(g, chunk_size=32)
+    x = jnp.zeros(g.n).at[7].set(1.0)
+    act = jnp.zeros(g.n, bool).at[7].set(True)
+    pol_s = ExecutionPolicy(switch_fraction=0.5, vcap=64, ecap=128)
+    pol_a = pol_s.with_(adaptive_cap=True)
+    y_s, st_s = traverse(sg, x, act, PLUS_TIMES, policy=pol_s)
+    y_a, st_a = traverse(sg, x, act, PLUS_TIMES, policy=pol_a)
+    assert np.array_equal(np.asarray(y_s), np.asarray(y_a))
+    assert tuple(int(v) for v in st_s) == tuple(int(v) for v in st_a)
+    assert int(st_a.records) == 2  # row-exact: vertex 7's two path edges
