@@ -14,6 +14,14 @@ Two comparisons, both like-for-like:
 
 Memory: SEM holds O(n) state vectors resident; in-memory holds the O(m)
 edge arrays.  The ratio is the paper's 20-100x axis (here = edge factor).
+
+Since the residency axis landed, the comparison also runs as TRUE SEM:
+``residency='host'`` keeps the O(m) edge store in host RAM and streams
+only the live work-list per superstep (double-buffered), so the
+``sem_host`` rows measure actual host-link traffic (``host_link_bytes``,
+from the IOStats odometer) and actual peak device staging
+(``peak_stage_MB``, from ``Graph.memory_report()``) — not just counted
+I/O events against a device-resident store.
 """
 from __future__ import annotations
 
@@ -21,8 +29,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from repro.algs import pagerank_inmem, pagerank_push
-from repro.core import PLUS_TIMES, flat_spmv, sem_spmv, spmv
+from repro.core import (
+    ExecutionPolicy,
+    PLUS_TIMES,
+    flat_spmv,
+    host_graph,
+    sem_spmv,
+    spmv,
+    traverse,
+)
 
 from .common import bench_graph, row, sem_graph, timeit
 
@@ -85,6 +102,61 @@ def run(quick: bool = True) -> list:
         row("sem_vs_inmem", "e2e_sem_push", "runtime_s", t_s),
         row("sem_vs_inmem", "sem", "fraction_of_inmem",
             max(frac_sweep, t_i / t_s)),
+    ]
+
+    # ---- true SEM: host-resident edge store, streamed supersteps ----
+    # sweep: one full-frontier host-streamed traverse vs the flat pass over
+    # the SAME graph.  The host stream pays a fixed per-batch dispatch cost
+    # (eager device_put + kernel launch per buffer), so the sweep uses a
+    # scale >= 13 workload where edge work amortizes it — at scale 12 the
+    # measurement is Python dispatch latency, not link bandwidth, which is
+    # not what the paper's SSD claim is about.
+    g_s = g if not quick else bench_graph(13)
+    sg_s = sem_graph(g_s, chunk_size=8192)
+    x_s = jnp.asarray(rng.random(g_s.n).astype(np.float32))
+    allv_s = jnp.ones(g_s.n, bool)
+    flat_s_fn = jax.jit(lambda x: flat_spmv(sg_s, x, allv_s, PLUS_TIMES))
+    y_flat_s, t_flat_s = timeit(lambda: flat_s_fn(x_s), repeats=5)
+    hg = host_graph(g_s, chunk_size=8192)
+    hpol = ExecutionPolicy(switch_fraction=None, residency="host")
+    y_host, t_host = timeit(
+        lambda: traverse(hg, x_s, allv_s, PLUS_TIMES, policy=hpol), repeats=5
+    )
+    np.testing.assert_allclose(
+        np.asarray(y_host[0]), np.asarray(y_flat_s), rtol=1e-4
+    )
+    frac_host_sweep = t_flat_s / t_host
+    rows += [
+        row("sem_vs_inmem", "sweep_sem_host", "runtime_s", t_host),
+        row("sem_vs_inmem", "sweep_sem_host", "fraction_of_inmem",
+            frac_host_sweep),
+    ]
+
+    # e2e: PR-push streamed from the host store vs flat in-memory.  The
+    # session view proves the residency claim with measured numbers: zero
+    # device-resident edge bytes, bounded staging, counted link traffic.
+    gh = repro.Graph(g, chunk_size=8192)
+    host_pol = ExecutionPolicy(residency="host")
+    r_h, t_h = timeit(
+        lambda: gh.pagerank(tol=1e-4, policy=host_pol), repeats=2
+    )
+    np.testing.assert_allclose(
+        np.asarray(r_h.values), np.asarray(r_s), rtol=1e-5
+    )
+    mr = gh.memory_report(host_pol)
+    assert mr["device_edge_total"] == 0, "host run built a device edge copy"
+    rows += [
+        row("sem_vs_inmem", "e2e_sem_host", "runtime_s", t_h),
+        row("sem_vs_inmem", "sem_host", "fraction_of_inmem",
+            max(frac_host_sweep, t_i / t_h)),
+        row("sem_vs_inmem", "sem_host", "host_link_bytes",
+            int(r_h.iostats.host_bytes)),
+        row("sem_vs_inmem", "sem_host", "peak_stage_MB",
+            mr["peak_stage_bytes"] / 1e6),
+        row("sem_vs_inmem", "sem_host", "host_store_MB",
+            mr["host_store_bytes"] / 1e6),
+        row("sem_vs_inmem", "sem_host", "device_edge_bytes",
+            mr["device_edge_total"]),
     ]
 
     n_state_bytes = 4 * g.n * 4  # rank, aux, active, degree vectors

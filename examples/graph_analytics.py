@@ -80,6 +80,27 @@ def main() -> int:
     record("louvain", lv, time.time() - t0)
     print(f"    modularity = {lv.state.modularity:.3f} "
           f"({int(lv.iostats.bytes_moved)} bytes rewritten)")
+
+    # True SEM rerun: residency='host' keeps the O(m) edge store in host
+    # RAM and double-buffers the live work-list to the device — the same
+    # policy object drives it (with_ swaps one field).  A fresh session
+    # proves the residency claim: zero device-resident edge bytes vs the
+    # O(m) device copy above (measured at scale 10: 0.29 MB -> 0, with
+    # ~0.26 MB of bounded staging — break-even at this toy scale, but the
+    # staging stays O(buffer) while the device copy grows O(m), so the
+    # ratio is ~20x by scale 16), with bit-identical ranks.
+    g_host = repro.Graph(g.host, chunk_size=2048)
+    host_pol = policy.with_(residency="host")
+    t0 = time.time()
+    pr_h = g_host.pagerank(policy=host_pol)
+    record("pagerank/host", pr_h, time.time() - t0)
+    mr_h = g_host.memory_report(host_pol)
+    mr_d = g.memory_report()
+    assert np.array_equal(np.asarray(pr_h.values), np.asarray(pr.values))
+    print(f"    device edge bytes: {mr_d['device_edge_total'] / 1e6:.2f} MB "
+          f"(device) -> {mr_h['device_edge_total']} (host); "
+          f"{int(pr_h.iostats.host_bytes) / 1e6:.2f} MB over the link, "
+          f"peak staging {mr_h['peak_stage_bytes'] / 1e6:.2f} MB")
     return 0
 
 

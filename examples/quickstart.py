@@ -89,3 +89,22 @@ wcc = gu.run(WCC(), policy=policy)
 n_comp = int(jnp.unique(wcc.values).shape[0])
 print(f"custom WCC program: {n_comp} components "
       f"in {int(wcc.supersteps)} supersteps")
+
+# 6. TRUE semi-external memory: residency='host' pins the O(m) edge store
+#    in host RAM and streams only the live work-list to the device each
+#    superstep (double-buffered).  Same bits, same supersteps, same
+#    IOStats as the device run — but the device never holds the edges:
+#    measured on this graph, device-resident edge bytes drop from 2.35 MB
+#    to 0, with peak staging bounded by two stream buffers (~1 MB here) —
+#    a ~2.3x device-memory cut even counting the staging buffers, and
+#    O(n)+O(buffer) instead of O(m) as the graph grows.
+gh = repro.Graph(rmat(12, edge_factor=16, seed=7, symmetrize=True))
+host_pol = repro.ExecutionPolicy(residency="host")
+pr_host = gh.pagerank(policy=host_pol)
+mr_host = gh.memory_report(host_pol)
+mr_dev = gu.memory_report()
+assert jnp.array_equal(pr_host.values, gu.pagerank().values)
+print(f"host residency: {mr_dev['device_edge_total'] / 1e6:.2f} MB device "
+      f"edges -> {mr_host['device_edge_total']} bytes; "
+      f"{int(pr_host.iostats.host_bytes) / 1e6:.2f} MB streamed, "
+      f"peak staging {mr_host['peak_stage_bytes'] / 1e3:.0f} KB")

@@ -107,6 +107,16 @@ class CorenessProgram(VertexProgram):
 
         def fetch(_):
             if self.messaging == "p2p":
+                if getattr(sg, "is_host_view", False):
+                    # The raw p2p gather has no host form; force the host
+                    # dispatcher's p2p arm with the same hardcoded caps.
+                    # Capacity-invariance makes values and IOStats match
+                    # the direct call bitwise.
+                    return traverse(
+                        sg, fr.x, fr.active, PLUS_TIMES,
+                        policy=policy.with_(switch_fraction=1.0, vcap=sg.n,
+                                            ecap=max(int(sg.m), 1)),
+                    )
                 return p2p_spmv(sg, fr.x, fr.active, PLUS_TIMES,
                                 direction="out", vcap=sg.n,
                                 ecap=max(int(sg.m), 1))
@@ -115,7 +125,12 @@ class CorenessProgram(VertexProgram):
         def skip(_):
             return jnp.zeros(sg.n), IOStats.zero()
 
-        return jax.lax.cond(jnp.any(fr.active), fetch, skip, None)
+        pred = jnp.any(fr.active)
+        if isinstance(pred, jax.core.Tracer):
+            return jax.lax.cond(pred, fetch, skip, None)
+        # Eager (host-residency) driver: lax.cond would trace BOTH branches,
+        # and a traced frontier cannot be streamed — take a Python branch.
+        return fetch(None) if bool(pred) else skip(None)
 
     def apply(self, sg: SemGraph, s: CoreState, delta):
         removed = s.alive & (s.deg <= s.k)

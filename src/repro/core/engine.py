@@ -71,6 +71,23 @@ size:
     ``ecap`` capacities fit), where even one live unit per live vertex
     over-fetches.
 
+**Residency (device vs host, the SEM axis).**  Orthogonal to both switches
+above: ``ExecutionPolicy.residency`` decides where the O(m) edge store
+*lives*.  ``'device'`` (default) keeps chunk/tile arrays in device memory —
+streaming is simulated, fetch/skip decisions are counted but every byte is
+already resident.  ``'host'`` pins the edge store in host RAM
+(:mod:`repro.core.residency`) and ships only the live work-list per
+superstep, double-buffered (`jax.device_put` of batch k+1 dispatched while
+batch k computes), so peak device bytes are O(n) vertex state plus
+O(stream_buffer) staging — true semi-external memory.  The cost model
+gains a host-link term: a host superstep pays ``live_bytes / B_link``
+transfer time overlapped against compute, so it runs at compute-bound
+speed when ``B_link * t_compute >= live_bytes`` and degrades gracefully to
+link-bound streaming otherwise (the paper's "80% of in-memory" regime is
+exactly the overlapped case).  ``IOStats.host_bytes`` measures that
+traffic; every other order-invariant field — and the values — are
+bitwise-identical across residencies, which is the refactor's safety net.
+
 Backends
 --------
 The multicast/compact step has four interchangeable executions, selected by
@@ -201,6 +218,19 @@ class ExecutionPolicy:
         Ignored by the scan/compact backends.
       interpret: force Pallas interpret mode for the blocked backends
         (``None`` = auto: interpret everywhere but real TPUs).
+      residency: where the O(m) edge store lives — 'device' (default; the
+        whole chunk/tile store is device-resident, streaming is simulated)
+        or 'host' (edges pinned in host RAM, live chunks/tiles shipped per
+        superstep with double-buffered ``jax.device_put``; peak device
+        bytes O(n) + O(stream_buffer)).  Values and all order-invariant
+        IOStats fields are bitwise-identical across residencies; 'host'
+        additionally measures its link traffic in ``IOStats.host_bytes``.
+        Run host policies through ``repro.Graph`` (which builds the host
+        view) or :func:`repro.core.residency.host_graph`.
+      stream_buffer: staging batch size of the 'host' streaming executor,
+        in fetch units (chunks for scan/compact, tiles for the blocked
+        backends).  Two buffers of this size are in flight at the peak
+        (one computing, one copying).  Ignored when residency='device'.
     """
 
     backend: str = "scan"
@@ -215,6 +245,8 @@ class ExecutionPolicy:
     beta: float = 24.0
     tile_order: str = "dest"
     interpret: Optional[bool] = None
+    residency: str = "device"
+    stream_buffer: int = 16
 
     def __post_init__(self):
         from ..kernels.spmv.order import TILE_ORDERS
@@ -228,6 +260,13 @@ class ExecutionPolicy:
                 f"unknown tile_order {self.tile_order!r}; expected one of "
                 f"{TILE_ORDERS}"
             )
+        if self.residency not in ("device", "host"):
+            raise ValueError(
+                f"unknown residency {self.residency!r}; expected 'device' "
+                "or 'host'"
+            )
+        if int(self.stream_buffer) < 1:
+            raise ValueError("stream_buffer must be >= 1")
 
     def with_(self, **kw) -> "ExecutionPolicy":
         """A copy with the given fields replaced."""
@@ -330,6 +369,73 @@ def _select_blocked(sg: SemGraph, direction: str, reverse: bool):
     raise NotImplementedError("blocked backend: direction='in' with reverse")
 
 
+def _check_blocked_semiring(sr: Semiring, tile_semiring: str,
+                            weighted: bool) -> bool:
+    """Validate (gather semiring, tile encoding); returns the ``boolean``
+    flag (or_and executed as f32 matmul + y>0 threshold).  Shared by the
+    device blocked path and the host streaming executor so both residencies
+    accept and reject exactly the same combinations."""
+    boolean = sr.name == "or_and"
+    if boolean:
+        if tile_semiring not in ("plus_times", "bool"):
+            raise ValueError(
+                "or_and requires 'plus_times' or 'bool' blocked tiles"
+            )
+        if tile_semiring == "plus_times" and weighted:
+            # Real weights in the tiles would let a zero or cancelling
+            # negative weight silently drop an edge from the y>0 threshold,
+            # and binarizing here would re-copy the whole tile set every
+            # superstep — require the 0/1 view built once up front instead.
+            raise ValueError(
+                "or_and on a weighted graph needs occupancy tiles; build "
+                "with device_graph(..., blocked_semiring='bool')"
+            )
+    elif sr.name != tile_semiring:
+        raise ValueError(
+            f"semiring {sr.name!r} needs blocked tiles built with "
+            f"semiring={sr.name!r} (have {tile_semiring!r})"
+        )
+    return boolean
+
+
+def _blocked_pre_mask(tile_semiring: str, active_on: str,
+                      active: jnp.ndarray, x: jnp.ndarray,
+                      boolean: bool) -> jnp.ndarray:
+    """The kernel-input x: cast for boolean flows and, on push, mask
+    inactive senders with the additive identity so block-granular tiles
+    stay row-exact.  Shared across residencies (bitwise parity)."""
+    xv = x.astype(jnp.float32) if boolean else x
+    if active_on == "src":
+        ident = jnp.inf if tile_semiring == "min_plus" else 0.0
+        mask = active.reshape((-1,) + (1,) * (xv.ndim - 1))
+        xv = jnp.where(mask, xv, jnp.asarray(ident, xv.dtype))
+    return xv
+
+
+def _blocked_post(sr: Semiring, active_on: str, active: jnp.ndarray,
+                  y: jnp.ndarray, y_init: Optional[jnp.ndarray],
+                  boolean: bool, out_dtype) -> jnp.ndarray:
+    """The kernel-output epilogue: boolean threshold, pull/reverse masking
+    of inactive major rows, y_init combine, dtype restore.  Shared across
+    residencies (bitwise parity)."""
+    if boolean:
+        y = y > 0
+    if active_on == "dst":
+        # Pull/reverse: contributions land only on active major rows.
+        mask = active.reshape((-1,) + (1,) * (y.ndim - 1))
+        base = (
+            y_init
+            if y_init is not None
+            else jnp.full(y.shape, sr.identity, y.dtype)
+        )
+        y = jnp.where(mask, sr.combine_elem(base.astype(y.dtype), y), base)
+    elif y_init is not None:
+        y = sr.combine_elem(y_init.astype(y.dtype), y)
+    if not boolean:
+        y = y.astype(out_dtype)
+    return y
+
+
 def blocked_backend_spmv(
     sg: SemGraph,
     x: jnp.ndarray,
@@ -373,55 +479,16 @@ def blocked_backend_spmv(
     if interpret is None:
         interpret = default_interpret()
 
-    boolean = sr.name == "or_and"
-    if boolean:
-        if bg.semiring not in ("plus_times", "bool"):
-            raise ValueError(
-                "or_and requires 'plus_times' or 'bool' blocked tiles"
-            )
-        if bg.semiring == "plus_times" and sg.w is not None:
-            # Real weights in the tiles would let a zero or cancelling
-            # negative weight silently drop an edge from the y>0 threshold,
-            # and binarizing here would re-copy the whole tile set every
-            # superstep — require the 0/1 view built once up front instead.
-            raise ValueError(
-                "or_and on a weighted graph needs occupancy tiles; build "
-                "with device_graph(..., blocked_semiring='bool')"
-            )
-    elif sr.name != bg.semiring:
-        raise ValueError(
-            f"semiring {sr.name!r} needs blocked tiles built with "
-            f"semiring={sr.name!r} (have {bg.semiring!r})"
-        )
+    boolean = _check_blocked_semiring(sr, bg.semiring, sg.w is not None)
 
     n = sg.n
-    xv = x.astype(jnp.float32) if boolean else x
-    if active_on == "src":
-        # Push: only active majors (sources) contribute — mask their sends
-        # with the additive identity so block-granular tiles stay row-exact.
-        ident = jnp.inf if bg.semiring == "min_plus" else 0.0
-        mask = active.reshape((-1,) + (1,) * (xv.ndim - 1))
-        xv = jnp.where(mask, xv, jnp.asarray(ident, xv.dtype))
+    xv = _blocked_pre_mask(bg.semiring, active_on, active, x, boolean)
 
     y, stats = blocked_spmv(bg, xv, active, active_on=active_on,
                             interpret=interpret, compact=compact,
                             grid_bucket=grid_bucket, assume_fits=assume_fits)
 
-    if boolean:
-        y = y > 0
-    if active_on == "dst":
-        # Pull/reverse: contributions land only on active major rows.
-        mask = active.reshape((-1,) + (1,) * (y.ndim - 1))
-        base = (
-            y_init
-            if y_init is not None
-            else jnp.full(y.shape, sr.identity, y.dtype)
-        )
-        y = jnp.where(mask, sr.combine_elem(base.astype(y.dtype), y), base)
-    elif y_init is not None:
-        y = sr.combine_elem(y_init.astype(y.dtype), y)
-    if not boolean:
-        y = y.astype(x.dtype)
+    y = _blocked_post(sr, active_on, active, y, y_init, boolean, x.dtype)
 
     # ---- unified IOStats (same units as the scan path) ----
     # requests: one per active major vertex whose block holds >=1 tile.
@@ -446,6 +513,7 @@ def blocked_backend_spmv(
         supersteps=jnp.zeros((), jnp.int32),
         bytes_moved=(stats["tiles_fetched"] * tile_bytes).astype(jnp.int32),
         x_fetches=stats["x_fetches"].astype(jnp.int32),
+        host_bytes=jnp.zeros((), jnp.int32),
     )
     return y, st
 
@@ -734,6 +802,28 @@ def traverse(
     the I/O the chosen execution actually did.
     """
     pol = policy if policy is not None else ExecutionPolicy()
+    is_host = bool(getattr(sg, "is_host_view", False))
+    if pol.residency == "host" or is_host:
+        if not is_host:
+            raise ValueError(
+                "residency='host' policy met a device-resident graph: this "
+                "SemGraph's edge store already lives in device memory, so "
+                "streaming it from host would misreport residency.  Run "
+                "through repro.Graph (sessions key views on residency) or "
+                "build a host view with repro.core.residency.host_graph()"
+            )
+        if pol.residency != "host":
+            raise ValueError(
+                "device-residency policy met a host-resident graph view: "
+                "its edge store has no device copy to dispatch on.  Use "
+                "ExecutionPolicy(residency='host') or build a device view "
+                "with device_graph()"
+            )
+        from .residency import host_traverse
+
+        return host_traverse(sg, x, active, sr, policy=pol,
+                             unexplored=unexplored, reverse=reverse,
+                             y_init=y_init)
     if reverse or unexplored is None:
         direction = pol.direction if pol.direction in ("out", "in") else "out"
         return _dispatch(sg, x, active, sr, direction=direction,

@@ -214,6 +214,14 @@ def run_program(
     """
     pol = policy if policy is not None else prog.default_policy
     pol = pol if pol is not None else ExecutionPolicy()
+    if pol.residency == "host" or getattr(sg, "is_host_view", False):
+        # Host residency runs an eager BSP loop (each superstep plans its
+        # host->device streaming batches from the concrete frontier);
+        # run_program_host validates the policy/view pairing.
+        from .residency import run_program_host
+
+        return run_program_host(sg, prog, pol, seeds=seeds,
+                                max_supersteps=max_supersteps)
     pol = prog.prepare_policy(sg, pol)
     state0 = prog.init(sg, seeds)
     budget = max_supersteps if max_supersteps is not None \

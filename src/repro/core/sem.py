@@ -42,6 +42,7 @@ __all__ = [
     "SemGraph",
     "bucket_index",
     "build_store",
+    "build_store_arrays",
     "chunk_activity",
     "compact_spmv",
     "device_graph",
@@ -88,6 +89,14 @@ class IOStats(NamedTuple):
       it is schedule-SENSITIVE: two policies differing only in
       ``tile_order`` report identical requests/records/bytes and differ
       here alone.
+    host_bytes: *measured* bytes shipped across the host->device link by
+      the ``residency='host'`` streaming executor (the ``.nbytes`` of every
+      ``jax.device_put`` payload, batch padding included) — this is the one
+      counter that is an odometer rather than a model.  Zero on every
+      device-resident path, so it is residency-SENSITIVE by construction:
+      host and device runs of the same policy agree on every other
+      order-invariant field and differ here alone, which is why the
+      host-vs-device parity checks exclude it.
 
     All counters are int32 (JAX's default integer without x64), so each
     wraps at 2^31 of its unit — ~2 GiB for ``bytes_moved``, ~2.1e9 edge
@@ -103,11 +112,12 @@ class IOStats(NamedTuple):
     supersteps: jnp.ndarray
     bytes_moved: jnp.ndarray
     x_fetches: jnp.ndarray
+    host_bytes: jnp.ndarray
 
     @staticmethod
     def zero() -> "IOStats":
         z = jnp.zeros((), dtype=jnp.int32)
-        return IOStats(z, z, z, z, z, z, z)
+        return IOStats(z, z, z, z, z, z, z, z)
 
     def __add__(self, other: "IOStats") -> "IOStats":  # type: ignore[override]
         return IOStats(*(a + b for a, b in zip(self, other)))
@@ -185,10 +195,17 @@ class SemGraph:
     out_blocked_rev: Optional[object] = None
 
 
-def build_store(
+def build_store_arrays(
     g: Graph, *, sorted_by: str, chunk_size: int = 4096
-) -> EdgeChunkStore:
-    """Chop a CSR/CSC view into fixed-size streamable chunks (host side)."""
+) -> dict:
+    """Numpy core of :func:`build_store`: chop a CSR/CSC view into
+    fixed-size streamable chunks, returning plain host arrays.
+
+    The ``residency='host'`` path keeps exactly these arrays pinned in host
+    RAM (:class:`repro.core.residency.HostChunkStore`) and ships slices on
+    demand, while :func:`build_store` wraps them as device arrays — the one
+    chopper guarantees both residencies stream byte-identical chunks.
+    """
     assert sorted_by in ("src", "dst")
     if sorted_by == "src":
         indptr, minor, w = g.indptr, g.indices, g.weights
@@ -209,22 +226,38 @@ def build_store(
     )
     wp = None
     if w is not None:
-        wp = np.concatenate([w, np.zeros(pad, np.float32)]).reshape(
-            num_chunks, chunk_size
-        )
+        wp = np.concatenate([np.asarray(w, np.float32), np.zeros(pad, np.float32)]
+                            ).reshape(num_chunks, chunk_size)
     valid = majp < n
     any_valid = valid.any(axis=1)
     lo = np.where(any_valid, majp.min(axis=1, where=valid, initial=n), n)
     hi = np.where(any_valid, majp.max(axis=1, where=valid, initial=-1), n)
-    return EdgeChunkStore(
-        major=jnp.asarray(majp),
-        minor=jnp.asarray(minp),
-        w=None if wp is None else jnp.asarray(wp),
-        lo=jnp.asarray(lo.astype(np.int32)),
-        hi=jnp.asarray(hi.astype(np.int32)),
+    return dict(
+        major=majp,
+        minor=minp,
+        w=wp,
+        lo=lo.astype(np.int32),
+        hi=hi.astype(np.int32),
         n=n,
         chunk_size=chunk_size,
         sorted_by=sorted_by,
+    )
+
+
+def build_store(
+    g: Graph, *, sorted_by: str, chunk_size: int = 4096
+) -> EdgeChunkStore:
+    """Chop a CSR/CSC view into fixed-size streamable chunks (host side)."""
+    a = build_store_arrays(g, sorted_by=sorted_by, chunk_size=chunk_size)
+    return EdgeChunkStore(
+        major=jnp.asarray(a["major"]),
+        minor=jnp.asarray(a["minor"]),
+        w=None if a["w"] is None else jnp.asarray(a["w"]),
+        lo=jnp.asarray(a["lo"]),
+        hi=jnp.asarray(a["hi"]),
+        n=a["n"],
+        chunk_size=a["chunk_size"],
+        sorted_by=a["sorted_by"],
     )
 
 
@@ -453,6 +486,7 @@ def sem_spmv(
                 supersteps=st.supersteps,
                 bytes_moved=st.bytes_moved + store.chunk_size * rec_bytes,
                 x_fetches=st.x_fetches,
+                host_bytes=st.host_bytes,
             )
             return y, st
 
@@ -547,6 +581,7 @@ def compact_spmv(
             bytes_moved=n_act_chunks * store.chunk_size
             * _store_record_bytes(store.w),
             x_fetches=jnp.zeros((), jnp.int32),
+            host_bytes=jnp.zeros((), jnp.int32),
         )
         return y[:n], st
 
@@ -630,5 +665,6 @@ def p2p_spmv(
         supersteps=jnp.zeros((), jnp.int32),
         bytes_moved=(total_edges * _store_record_bytes(w)).astype(jnp.int32),
         x_fetches=jnp.zeros((), jnp.int32),
+        host_bytes=jnp.zeros((), jnp.int32),
     )
     return y[:n], st

@@ -34,7 +34,7 @@ import numpy as np
 
 from ..core import ExecutionPolicy, IOStats, ProgramResult, SemGraph, run_program
 from ..core.program import VertexProgram
-from ..core.sem import device_graph
+from ..core.sem import _store_record_bytes, device_graph
 from ..core.semiring import PLUS_TIMES
 # Algorithm imports are eager: a lazy import executed during a user's first
 # jitted façade call would run module bodies inside the trace (and any
@@ -75,6 +75,7 @@ def _host_result(values, *, supersteps=0, state=None,
         supersteps=_i32(supersteps),
         bytes_moved=_i32(bytes_moved),
         x_fetches=z,
+        host_bytes=z,
     )
     return ProgramResult(values, _i32(supersteps), io, state)
 
@@ -107,6 +108,7 @@ class Graph:
         self._base: Optional[SemGraph] = None
         self._tiles: dict = {}  # (semiring, reverse, tile_order) -> BlockedGraph
         self._views: dict = {}  # (semiring, with_reverse, tile_order) -> SemGraph
+        self._host_view = None  # the one residency='host' view (lazy)
 
     # ------------------------------------------------------------- build
     @classmethod
@@ -222,9 +224,124 @@ class Graph:
                 )
         return self._tiles[key]
 
+    def host_view(self):
+        """The cached host-resident SEM view (``residency='host'``).
+
+        Lazy like every other view, and keyed separately: a host session
+        never touches ``device()``, so the O(m) device copy is never
+        built.  Blocked tile stores are sub-cached inside the view per
+        (encoding, direction, tile_order), mirroring the device cache.
+        """
+        if self._host_view is None:
+            from ..core.residency import host_graph
+
+            self._host_view = host_graph(self._host,
+                                         chunk_size=self._chunk_size,
+                                         bd=self._bd, bs=self._bs)
+        return self._host_view
+
+    def memory_report(self, policy: Optional[ExecutionPolicy] = None) -> dict:
+        """Where this session's graph bytes live right now.
+
+        Returns a dict with
+
+          * ``device_views`` — bytes per cached device view (``'base'``
+            plus one ``'tiles:<encoding>:<fwd|rev>:<order>'`` entry per
+            tile view), de-duplicated by array identity (composed views
+            share the base arrays);
+          * ``device_total`` — their sum;
+          * ``device_edge_total`` — the O(m) subset: edge chunk stores,
+            CSR index/weight columns, and tile views.  The SEM claim is
+            about THIS number: ``residency='host'`` keeps it at 0;
+          * ``host_store_bytes`` — host-pinned edge-store bytes;
+          * ``peak_stage_bytes`` — largest measured in-flight staging
+            footprint (≤ two ``stream_buffer`` batches by construction);
+          * ``stream_buffer_bytes`` — the model size of ONE staging batch
+            under ``policy`` (tile batches for blocked backends, chunk
+            batches otherwise; when the p2p sparse arm is enabled its
+            exact-``ecap``-lane single-shot payload is folded in as a
+            ``max`` term, since bitwise scatter parity forbids splitting
+            it).  Peak staging is ≤ 2 of these, with one caveat: a
+            blocked accumulator run is never split (bitwise parity
+            demands it), so a run longer than ``stream_buffer`` tiles
+            becomes an oversized batch — runs are at most
+            ``ceil(n / bs)`` tiles, so the bound is unconditional once
+            ``stream_buffer`` reaches that.
+        """
+        pol = policy if policy is not None else ExecutionPolicy()
+
+        def _nbytes(tree, seen) -> int:
+            total = 0
+            for leaf in jax.tree_util.tree_leaves(tree):
+                if hasattr(leaf, "nbytes") and id(leaf) not in seen:
+                    seen.add(id(leaf))
+                    total += int(leaf.nbytes)
+            return total
+
+        seen: set = set()
+        device_views = {}
+        if self._base is not None:
+            device_views["base"] = _nbytes(self._base, seen)
+        for (sr, rev, order), tv in sorted(self._tiles.items(),
+                                           key=lambda kv: repr(kv[0])):
+            name = f"tiles:{sr}:{'rev' if rev else 'fwd'}:{order}"
+            device_views[name] = _nbytes(tv, seen)
+
+        edge_seen: set = set()
+        device_edge_total = 0
+        if self._base is not None:
+            for part in (self._base.out_store, self._base.in_store,
+                         self._base.indices, self._base.w,
+                         self._base.in_indices, self._base.in_w):
+                if part is not None:
+                    device_edge_total += _nbytes(part, edge_seen)
+        for tv in self._tiles.values():
+            device_edge_total += _nbytes(tv, edge_seen)
+
+        B = pol.stream_buffer
+        if pol.backend in _BLOCKED:
+            # tile batches round up to a power of two of steps; each step
+            # ships its tile plus six int32 schedule flags (+ one count).
+            G = 1
+            while G < B:
+                G *= 2
+            stream_buffer_bytes = G * (self._bd * self._bs * 4 + 6 * 4) + 4
+        else:
+            # chunk batches ship record columns plus one validity flag
+            # per slot.
+            stream_buffer_bytes = (
+                B * (self._chunk_size
+                     * _store_record_bytes(self._host.weights) + 1)
+            )
+        if pol.switch_fraction is not None:
+            # the p2p sparse arm ships its exact-ecap-lane payload in ONE
+            # piece (bitwise scatter parity needs the device's static lane
+            # shape), so its single staged batch — not double-buffered —
+            # can exceed the chunk/tile batch model.
+            ecap = (pol.ecap if pol.ecap is not None
+                    else max(int(self._host.m), 1))
+            lane = 9 + (4 if self._host.weights is not None else 0)
+            stream_buffer_bytes = max(stream_buffer_bytes, ecap * lane)
+        hv = self._host_view
+        return {
+            "residency": pol.residency,
+            "device_views": device_views,
+            "device_total": sum(device_views.values()),
+            "device_edge_total": device_edge_total,
+            "host_store_bytes": hv.store_nbytes if hv is not None else 0,
+            "peak_stage_bytes": hv.peak_stage_bytes if hv is not None else 0,
+            "stream_buffer_bytes": int(stream_buffer_bytes),
+        }
+
     def _sem(self, policy: Optional[ExecutionPolicy], prog=None, *,
              need_reverse: bool = False) -> SemGraph:
-        """The view a (program, policy) pair needs, built/cached on demand."""
+        """The view a (program, policy) pair needs, built/cached on demand.
+
+        Views are keyed on residency first: a host-residency policy gets
+        the host view and never builds (or falls back to) a device copy.
+        """
+        if policy is not None and policy.residency == "host":
+            return self.host_view()
         if policy is None or policy.backend not in _BLOCKED:
             return self.device()
         sr = getattr(prog, "semiring", None) or PLUS_TIMES
@@ -410,6 +527,15 @@ class Graph:
         A blocked-backend policy routes to the MXU tile path; anything
         else runs the host reference intersections (P6a ladder).
         """
+        if (policy is not None and policy.residency == "host"
+                and policy.backend in _BLOCKED):
+            raise ValueError(
+                "triangles with a blocked backend builds the device MXU "
+                "tile path (O(m) device bytes); residency='host' has no "
+                "streamed form for it — drop the blocked backend (the "
+                "reference variants are already host-resident) or use "
+                "residency='device'"
+            )
         r: TriangleResult = count_triangles(
             self._host, variant=variant, ordered=ordered,
             hash_threshold=hash_threshold, policy=policy,

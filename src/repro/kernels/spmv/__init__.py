@@ -3,6 +3,7 @@ from .ops import (
     TILE_ORDERS,
     blocked_spmv,
     build_blocked,
+    build_blocked_arrays,
     compact_grid_size,
     compact_tile_order,
     default_interpret,
@@ -18,6 +19,7 @@ __all__ = [
     "TILE_ORDERS",
     "blocked_spmv",
     "build_blocked",
+    "build_blocked_arrays",
     "blocked_spmv_ref",
     "compact_grid_size",
     "compact_tile_order",

@@ -52,6 +52,7 @@ __all__ = [
     "BlockedGraph",
     "TILE_ORDERS",
     "build_blocked",
+    "build_blocked_arrays",
     "blocked_spmv",
     "compact_grid_size",
     "compact_tile_order",
@@ -125,7 +126,7 @@ def _run_flags(dbid: np.ndarray, n_dst_blocks: int):
     return first, last, accum
 
 
-def build_blocked(
+def build_blocked_arrays(
     g: Graph,
     *,
     bd: int = 128,
@@ -134,26 +135,13 @@ def build_blocked(
     semiring: str = "plus_times",
     reverse: bool = False,
     tile_order: str = "dest",
-) -> BlockedGraph:
-    """Tile ``g``'s edges into dense (bd, bs) blocks (host side, numpy).
-
-    ``direction='out'`` builds y[dst] (+)= x[src] tiles (push); ``'in'``
-    sources the same operator from the in-CSR.  ``reverse=True`` transposes
-    the operator — y[src] (+)= x[dst] — which is the tile view betweenness
-    backward propagation streams (messages against the edge direction).
-    Absent edges hold the semiring annihilator (0 for plus_times/bool, +inf
-    for min_plus).
-
-    ``semiring='bool'`` builds *occupancy* tiles: every edge slot holds 1
-    regardless of weights, so boolean (or_and) frontiers are exact even on
-    weighted graphs with zero or negative weights.  They run on the
-    plus_times kernel.
-
-    ``tile_order`` ('dest' | 'morton' | 'hilbert') picks the streaming
-    schedule — the SAME tiles in a locality-aware order (see the module
-    docstring and :mod:`.order`).  The tile set, activity semantics, and
-    I/O accounting other than the x-fetch counter are order-invariant.
-    """
+) -> dict:
+    """Numpy core of :func:`build_blocked`: the tile arrays as plain host
+    arrays.  The ``residency='host'`` path pins exactly these in host RAM
+    (:class:`repro.core.residency.HostBlockedStore`) and ships live tiles
+    on demand; :func:`build_blocked` wraps them as device arrays — one
+    tiler, so both residencies stream byte-identical tiles in the same
+    schedule."""
     if tile_order not in TILE_ORDERS:
         raise ValueError(
             f"unknown tile_order {tile_order!r}; expected one of {TILE_ORDERS}"
@@ -215,19 +203,67 @@ def build_blocked(
         p = np.argsort(ck, kind="stable")
         tiles, dbid, sbid, nnz = tiles[p], dbid[p], sbid[p], nnz[p]
     first, last, accum = _run_flags(dbid, n_dst_blocks)
-    return BlockedGraph(
-        tiles=jnp.asarray(tiles),
-        dbid=jnp.asarray(dbid),
-        sbid=jnp.asarray(sbid),
-        first=jnp.asarray(first),
-        last=jnp.asarray(last),
-        accum=jnp.asarray(accum),
-        nnz=jnp.asarray(nnz),
+    return dict(
+        tiles=tiles,
+        dbid=dbid,
+        sbid=sbid,
+        first=first,
+        last=last,
+        accum=accum,
+        nnz=nnz,
         n=n,
         bd=bd,
         bs=bs,
         semiring=semiring,
         tile_order=tile_order,
+    )
+
+
+def build_blocked(
+    g: Graph,
+    *,
+    bd: int = 128,
+    bs: int = 128,
+    direction: str = "out",
+    semiring: str = "plus_times",
+    reverse: bool = False,
+    tile_order: str = "dest",
+) -> BlockedGraph:
+    """Tile ``g``'s edges into dense (bd, bs) blocks (host side, numpy).
+
+    ``direction='out'`` builds y[dst] (+)= x[src] tiles (push); ``'in'``
+    sources the same operator from the in-CSR.  ``reverse=True`` transposes
+    the operator — y[src] (+)= x[dst] — which is the tile view betweenness
+    backward propagation streams (messages against the edge direction).
+    Absent edges hold the semiring annihilator (0 for plus_times/bool, +inf
+    for min_plus).
+
+    ``semiring='bool'`` builds *occupancy* tiles: every edge slot holds 1
+    regardless of weights, so boolean (or_and) frontiers are exact even on
+    weighted graphs with zero or negative weights.  They run on the
+    plus_times kernel.
+
+    ``tile_order`` ('dest' | 'morton' | 'hilbert') picks the streaming
+    schedule — the SAME tiles in a locality-aware order (see the module
+    docstring and :mod:`.order`).  The tile set, activity semantics, and
+    I/O accounting other than the x-fetch counter are order-invariant.
+    """
+    a = build_blocked_arrays(g, bd=bd, bs=bs, direction=direction,
+                             semiring=semiring, reverse=reverse,
+                             tile_order=tile_order)
+    return BlockedGraph(
+        tiles=jnp.asarray(a["tiles"]),
+        dbid=jnp.asarray(a["dbid"]),
+        sbid=jnp.asarray(a["sbid"]),
+        first=jnp.asarray(a["first"]),
+        last=jnp.asarray(a["last"]),
+        accum=jnp.asarray(a["accum"]),
+        nnz=jnp.asarray(a["nnz"]),
+        n=a["n"],
+        bd=a["bd"],
+        bs=a["bs"],
+        semiring=a["semiring"],
+        tile_order=a["tile_order"],
     )
 
 
