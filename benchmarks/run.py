@@ -21,7 +21,11 @@ wall-clock actually tracks frontier density — the CI guard that the
 blocked path and the compaction layer stay wired into the engine.  It
 also re-runs PageRank under ``residency='host'`` (the true-SEM streamed
 path), gating on bitwise host-vs-device parity, zero device-resident
-edge bytes, and a non-zero measured ``host_bytes`` column.
+edge bytes, and a non-zero measured ``host_bytes`` column.  Finally it
+gates the fault-tolerance layer: a mid-run kill resumed from its newest
+checkpoint must be bitwise the uninterrupted run, checkpointing must
+cost <5% wall-clock, and the lease queue's merged sweep must be
+invariant to injected worker deaths.
 """
 from __future__ import annotations
 
@@ -47,6 +51,7 @@ BENCHES = [
     "bench_direction",
     "bench_tile_order",
     "bench_kernels",
+    "bench_recovery",
 ]
 
 # (bench, variant, metric, predicate, paper reference).  Magnitude targets
@@ -126,6 +131,18 @@ CLAIMS = [
     ("decode_attn_kernel", "window_256_vs_full", "fetch_reduction_x",
      lambda v: v > 4.0,
      "Kernel: window decode skips out-of-window KV blocks (P1 on LM)"),
+    ("recovery", "pagerank", "checkpoint_sync_frac", lambda v: v < 0.05,
+     "Fault tolerance: snapshotting every 8 supersteps costs <5% wall-clock "
+     "(measured synchronous checkpoint seconds / checkpointed runtime)"),
+    ("recovery", "pagerank", "kill_resume_parity_ok", lambda v: v == 1.0,
+     "Fault tolerance: killed-and-resumed run is bitwise the uninterrupted "
+     "run (values + full IOStats ledger)"),
+    ("recovery", "pagerank", "recover_speedup_x", lambda v: v > 1.5,
+     "Fault tolerance: resuming the newest checkpoint beats a from-scratch "
+     "rerun (crash at 2/3 of the run)"),
+    ("recovery", "queue", "death_invariance_ok", lambda v: v == 1.0,
+     "Lease queue: the merged multi-source sweep is bitwise-invariant to "
+     "injected worker deaths"),
 ]
 
 
@@ -281,9 +298,21 @@ def smoke(json_out: str | None = None) -> int:
         and tsum["rmat"]["hilbert"] <= tsum["rmat"]["dest"]
     )
 
+    # fault-tolerance gate: a PageRank run killed mid-flight and resumed
+    # from its newest snapshot must be bitwise the uninterrupted run,
+    # snapshots must cost <5% wall-clock (measured at a scale where
+    # supersteps do real work, so fixed costs amortize), and the lease
+    # queue's merged BC sweep must be invariant to injected worker deaths.
+    from . import bench_recovery
+
+    rrows, rsum = bench_recovery.measure(label="smoke_recovery")
+    rows += rrows
+    recovery_ok = (rsum["parity_ok"] == 1.0 and rsum["queue_ok"] == 1.0
+                   and rsum["sync_frac"] < 0.05)
+
     print_rows(rows)
     ok = (err < 1e-5 and bfs_ok and dens_ok and dir_ok and facade_ok
-          and order_ok and sem_host_ok)
+          and order_ok and sem_host_ok and recovery_ok)
     host_col = {r["variant"]: int(r["value"]) for r in rows
                 if r["metric"] == "host_bytes"}
     print(f"# smoke {'PASS' if ok else 'FAIL'} in {time.time() - t0:.1f}s "
@@ -295,7 +324,11 @@ def smoke(json_out: str | None = None) -> int:
           f"[host_bytes {host_col}], "
           f"tile orders agree {order_ok} "
           f"[hilbert {tsum['rmat']['hilbert']} <= dest "
-          f"{tsum['rmat']['dest']} x-fetches])")
+          f"{tsum['rmat']['dest']} x-fetches], "
+          f"kill-resume parity {rsum['parity_ok'] == 1.0}, "
+          f"checkpoint sync overhead {100 * rsum['sync_frac']:.2f}% "
+          f"[wall ratio {rsum['overhead_x']:.3f}x], "
+          f"queue death invariance {rsum['queue_ok'] == 1.0})")
     if json_out:
         _write_json(json_out, rows, ok=ok, mode="smoke")
     return 0 if ok else 1

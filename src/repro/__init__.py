@@ -18,21 +18,29 @@ program classes, ``repro.graph`` host containers) stays importable for
 power users.
 """
 from .core import (
+    CheckpointSpec,
     ExecutionPolicy,
+    FailurePlan,
     Frontier,
     IOStats,
     ProgramResult,
     VertexProgram,
+    WorkQueue,
     run_program,
+    run_supervised,
 )
 from .graph.session import Graph
 
 __all__ = [
+    "CheckpointSpec",
     "ExecutionPolicy",
+    "FailurePlan",
     "Frontier",
     "Graph",
     "IOStats",
     "ProgramResult",
     "VertexProgram",
+    "WorkQueue",
     "run_program",
+    "run_supervised",
 ]

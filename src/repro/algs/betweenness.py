@@ -171,15 +171,25 @@ def _finish(delta, sources):
     return jnp.sum(delta, axis=1)
 
 
-def _bc_sync(sg: SemGraph, sources: jnp.ndarray, max_iters, pol):
-    """Forward + backward phases through run_program (shared by shim/façade)."""
+def _bc_sync(sg: SemGraph, sources: jnp.ndarray, max_iters, pol,
+             *, checkpoint=None, resume: bool = False):
+    """Forward + backward phases through run_program (shared by shim/façade).
+
+    With ``checkpoint``, each phase snapshots into its own fingerprinted
+    subtree (``fwd/`` and ``bwd/``): a kill during the backward sweep
+    resumes there, replaying the finished forward phase from its final
+    snapshot rather than recomputing it."""
     sources = jnp.asarray(sources, jnp.int32)
     max_iters = max_iters or sg.n + 1
+    ck_f = checkpoint.child("fwd") if checkpoint is not None else None
+    ck_b = checkpoint.child("bwd") if checkpoint is not None else None
     fwd = run_program(sg, BCForwardProgram(), pol, seeds=sources,
-                      max_supersteps=max_iters)
+                      max_supersteps=max_iters,
+                      checkpoint=ck_f, resume=resume)
     max_level = jnp.max(jnp.where(fwd.state.dist < 0, -1, fwd.state.dist))
     bwd = run_program(sg, BCBackwardProgram(), pol,
-                      seeds=(fwd.state.sigma, fwd.state.dist, max_level))
+                      seeds=(fwd.state.sigma, fwd.state.dist, max_level),
+                      checkpoint=ck_b, resume=resume)
     io = fwd.iostats + bwd.iostats
     bc = _finish(bwd.values, sources)
     return bc, io, fwd.supersteps + jnp.maximum(max_level, 0)

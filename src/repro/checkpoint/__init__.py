@@ -1,13 +1,17 @@
 from .store import (
+    CheckpointCorruptionError,
     CheckpointManager,
     latest_step,
+    load_extra,
     restore_checkpoint,
     save_checkpoint,
 )
 
 __all__ = [
+    "CheckpointCorruptionError",
     "CheckpointManager",
     "latest_step",
+    "load_extra",
     "restore_checkpoint",
     "save_checkpoint",
 ]

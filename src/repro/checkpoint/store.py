@@ -3,9 +3,11 @@
 Semantics a 1000-node deployment needs, implemented without external deps:
 
   * **Atomicity** — a checkpoint is written to ``step_<n>.tmp`` and renamed
-    only after every shard file + the manifest are fsync'd.  A crash
-    mid-save never corrupts the latest-complete link; restore scans for the
-    highest *complete* step.
+    only after every shard file + the manifest are fsync'd (and the parent
+    directory is fsync'd after the rename, so the publish itself is
+    durable).  A crash mid-save never corrupts the latest-complete link;
+    restore scans for the highest *complete* step, skipping ``.tmp``
+    partials and stray non-step entries.
   * **Sharded layout** — each process writes only its local shards (here:
     one process, but the path layout is per-process: ``proc<k>.npz``), so
     writes scale with the host count, not the model size.
@@ -35,13 +37,40 @@ import ml_dtypes
 import numpy as np
 
 __all__ = [
+    "CheckpointCorruptionError",
     "save_checkpoint",
     "restore_checkpoint",
     "latest_step",
+    "load_extra",
     "CheckpointManager",
 ]
 
 _MANIFEST = "manifest.json"
+_EXTRA = "extra.json"
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """A checkpoint directory passed the completeness scan (manifest
+    present, not ``.tmp``) but its contents do not match the manifest —
+    e.g. a shard file holding fewer leaves than ``num_leaves``.  Raised
+    instead of unflattening a short leaf list into garbage."""
+
+
+def _step_num(name: str) -> Optional[int]:
+    """``step_<n>`` -> n, or None for stray non-step entries (a user's
+    ``step_old.bak``, editor droppings) — scanners must skip, not crash."""
+    tail = name.split("_", 1)[1] if "_" in name else ""
+    return int(tail) if tail.isdigit() else None
+
+
+def _fsync_path(path: Path) -> None:
+    """fsync a file (or directory) by path — directories need an O_RDONLY
+    descriptor; plain files get one too, after their writer has closed."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 # numpy can't serialize ml_dtypes (bfloat16 etc.) through savez — round-trip
 # them through a same-width integer view, recording the true dtype in the
@@ -68,9 +97,16 @@ def _flatten(tree: Any):
 
 
 def save_checkpoint(
-    directory: str | Path, step: int, tree: Any, *, process: int = 0
+    directory: str | Path, step: int, tree: Any, *, process: int = 0,
+    extra: Optional[dict] = None,
 ) -> Path:
-    """Write one atomic checkpoint; returns the final step directory."""
+    """Write one atomic checkpoint; returns the final step directory.
+
+    ``extra``: an optional JSON-serializable dict written as ``extra.json``
+    inside the step directory (published under the same atomic rename) —
+    the recovery layer stores its run fingerprint there so mismatches can
+    be diagnosed *before* any array is unflattened.
+    """
     directory = Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
     final = directory / f"step_{step:08d}"
@@ -82,9 +118,20 @@ def save_checkpoint(
     leaves, treedef = _flatten(tree)
     host = [np.asarray(jax.device_get(l)) for l in leaves]
     pairs = [_savable(a) for a in host]
-    np.savez(
-        tmp / f"proc{process}.npz", **{f"a{i}": a for i, (a, _) in enumerate(pairs)}
-    )
+    shard = tmp / f"proc{process}.npz"
+    # write + fsync the shard through one descriptor: np.savez(path) would
+    # close the file without a durability barrier, so a crash after the
+    # rename below could still publish a manifest pointing at unsynced data.
+    with open(shard, "wb") as f:
+        np.savez(f, **{f"a{i}": a for i, (a, _) in enumerate(pairs)})
+        f.flush()
+        os.fsync(f.fileno())
+    if extra is not None:
+        epath = tmp / _EXTRA
+        with open(epath, "w") as f:
+            json.dump(extra, f)
+            f.flush()
+            os.fsync(f.fileno())
     manifest = {
         "step": step,
         "num_leaves": len(leaves),
@@ -94,27 +141,40 @@ def save_checkpoint(
         "processes": 1,
     }
     mpath = tmp / _MANIFEST
-    mpath.write_text(json.dumps(manifest))
-    # fsync the manifest, then atomically publish the directory
-    with open(mpath) as f:
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
         os.fsync(f.fileno())
     if final.exists():
         shutil.rmtree(final)
     os.rename(tmp, final)
+    # fsync the parent directory so the rename itself survives a crash —
+    # without this the atomicity docstring holds for file *contents* only.
+    _fsync_path(directory)
     return final
 
 
 def latest_step(directory: str | Path) -> Optional[int]:
-    """Highest step with a complete manifest (ignores .tmp partials)."""
+    """Highest step with a complete manifest (ignores .tmp partials and
+    stray non-numeric ``step_*`` entries)."""
     directory = Path(directory)
     if not directory.exists():
         return None
     steps = []
     for d in directory.iterdir():
         if d.name.startswith("step_") and not d.name.endswith(".tmp"):
-            if (d / _MANIFEST).exists():
-                steps.append(int(d.name.split("_")[1]))
+            s = _step_num(d.name)
+            if s is not None and (d / _MANIFEST).exists():
+                steps.append(s)
     return max(steps) if steps else None
+
+
+def load_extra(directory: str | Path, step: int) -> Optional[dict]:
+    """The ``extra`` dict saved with a step, or None if none was."""
+    epath = Path(directory) / f"step_{step:08d}" / _EXTRA
+    if not epath.exists():
+        return None
+    return json.loads(epath.read_text())
 
 
 def restore_checkpoint(
@@ -123,12 +183,17 @@ def restore_checkpoint(
     step: Optional[int] = None,
     *,
     shardings: Any = None,
+    as_numpy: bool = False,
 ) -> tuple[Any, int]:
     """Restore into the structure of ``target_tree``.
 
     ``shardings`` (same pytree structure, NamedSharding leaves) re-shards
     the restored global arrays — pass the *new* mesh's shardings to restart
     elastically on a different topology.
+
+    ``as_numpy`` keeps the restored leaves as host numpy arrays (exact
+    saved dtypes — ``jnp.asarray`` would silently downcast float64/int64
+    when x64 is off), for host-side consumers like the work queue.
     """
     directory = Path(directory)
     if step is None:
@@ -138,6 +203,11 @@ def restore_checkpoint(
     d = directory / f"step_{step:08d}"
     data = np.load(d / "proc0.npz")
     manifest = json.loads((d / _MANIFEST).read_text())
+    if len(data.files) != manifest["num_leaves"]:
+        raise CheckpointCorruptionError(
+            f"checkpoint {d} is corrupt: shard holds {len(data.files)} "
+            f"leaves but the manifest promises {manifest['num_leaves']}"
+        )
     leaves = [
         _restore_dtype(data[f"a{i}"], manifest["dtypes"][i])
         for i in range(len(data.files))
@@ -148,7 +218,7 @@ def restore_checkpoint(
             shardings, is_leaf=lambda x: hasattr(x, "device_set")
         )
         leaves = [jax.device_put(a, s) for a, s in zip(leaves, sh_leaves)]
-    else:
+    elif not as_numpy:
         leaves = [jax.numpy.asarray(a) for a in leaves]
     return jax.tree_util.tree_unflatten(treedef, leaves), step
 
@@ -171,7 +241,8 @@ class CheckpointManager:
             err, self._error = self._error, None
             raise err
 
-    def save(self, step: int, tree: Any, *, blocking: bool = True):
+    def save(self, step: int, tree: Any, *, blocking: bool = True,
+             extra: Optional[dict] = None):
         """Snapshot to host, then serialize (optionally in background)."""
         self.wait()
         leaves, treedef = _flatten(tree)
@@ -180,7 +251,7 @@ class CheckpointManager:
 
         def _write():
             try:
-                save_checkpoint(self.directory, step, snapshot)
+                save_checkpoint(self.directory, step, snapshot, extra=extra)
                 self._gc()
             except BaseException as e:  # surfaced on next wait()/save()
                 self._error = e
@@ -199,9 +270,10 @@ class CheckpointManager:
 
     def _gc(self):
         steps = sorted(
-            int(d.name.split("_")[1])
+            s
             for d in self.directory.iterdir()
             if d.name.startswith("step_") and not d.name.endswith(".tmp")
+            and (s := _step_num(d.name)) is not None
             and (d / _MANIFEST).exists()
         )
         for s in steps[: -self.keep]:

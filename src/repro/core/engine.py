@@ -231,6 +231,14 @@ class ExecutionPolicy:
         in fetch units (chunks for scan/compact, tiles for the blocked
         backends).  Two buffers of this size are in flight at the peak
         (one computing, one copying).  Ignored when residency='device'.
+      stream_retries: bounded retry budget of the 'host' streaming path —
+        a transient ``device_put``/batch-dispatch failure is retried this
+        many times (exponential backoff from ``stream_backoff_s``) before
+        surfacing :class:`~repro.core.residency.StreamFailure`.  Each
+        absorbed retry increments ``IOStats.retries``, so recovery cost is
+        observable.  Ignored when residency='device'.
+      stream_backoff_s: initial backoff of the retry ladder, in seconds
+        (doubles per attempt).  Ignored when residency='device'.
     """
 
     backend: str = "scan"
@@ -247,6 +255,8 @@ class ExecutionPolicy:
     interpret: Optional[bool] = None
     residency: str = "device"
     stream_buffer: int = 16
+    stream_retries: int = 3
+    stream_backoff_s: float = 0.002
 
     def __post_init__(self):
         from ..kernels.spmv.order import TILE_ORDERS
@@ -267,6 +277,10 @@ class ExecutionPolicy:
             )
         if int(self.stream_buffer) < 1:
             raise ValueError("stream_buffer must be >= 1")
+        if int(self.stream_retries) < 0:
+            raise ValueError("stream_retries must be >= 0")
+        if float(self.stream_backoff_s) < 0:
+            raise ValueError("stream_backoff_s must be >= 0")
 
     def with_(self, **kw) -> "ExecutionPolicy":
         """A copy with the given fields replaced."""
@@ -514,6 +528,7 @@ def blocked_backend_spmv(
         bytes_moved=(stats["tiles_fetched"] * tile_bytes).astype(jnp.int32),
         x_fetches=stats["x_fetches"].astype(jnp.int32),
         host_bytes=jnp.zeros((), jnp.int32),
+        retries=jnp.zeros((), jnp.int32),
     )
     return y, st
 

@@ -190,6 +190,9 @@ def run_program(
     *,
     seeds=None,
     max_supersteps: Optional[int] = None,
+    checkpoint=None,
+    resume: bool = False,
+    _plan=None,
 ) -> ProgramResult:
     """The one BSP driver behind every algorithm (and ``repro.Graph``).
 
@@ -211,7 +214,23 @@ def run_program(
     ``policy`` falls back to ``prog.default_policy`` then to a plain
     :class:`ExecutionPolicy`; ``prog.prepare_policy`` then pins the fields
     the algorithm owns.  ``seeds`` is forwarded verbatim to ``prog.init``.
+
+    ``checkpoint=CheckpointSpec(...)`` snapshots the run every ``every_k``
+    supersteps (state, frontier, accumulated IOStats, superstep) through
+    :mod:`repro.core.recovery`; ``resume=True`` restores the newest
+    complete snapshot and continues, *bitwise-equal* to an uninterrupted
+    run on every backend and both residencies.  Checkpointed runs execute
+    eagerly (segments of the same while-loop body for device residency) —
+    they cannot sit under an enclosing ``jax.jit``.  ``_plan`` is the
+    supervisor's fault-injection channel (:func:`repro.core.recovery.
+    run_supervised`); user code leaves it None.
     """
+    if checkpoint is not None or _plan is not None:
+        from .recovery import run_program_checkpointed
+
+        return run_program_checkpointed(
+            sg, prog, policy, seeds=seeds, max_supersteps=max_supersteps,
+            checkpoint=checkpoint, resume=resume, _plan=_plan)
     pol = policy if policy is not None else prog.default_policy
     pol = pol if pol is not None else ExecutionPolicy()
     if pol.residency == "host" or getattr(sg, "is_host_view", False):
@@ -222,6 +241,21 @@ def run_program(
 
         return run_program_host(sg, prog, pol, seeds=seeds,
                                 max_supersteps=max_supersteps)
+    try:
+        eager = jax.core.trace_state_clean()
+    except AttributeError:  # future jax: assume traced, keep inline loop
+        eager = False
+    if eager:
+        # Eager device runs ride the checkpointed driver with
+        # checkpointing off: the SAME while-loop body, traced once and
+        # cached across calls (recovery._SEG_CACHE), so repeated runs
+        # skip the per-call retrace+recompile this inline path pays.
+        # Identical iteration predicate (the budget rides the carry
+        # instead of closing over it), bitwise-equal results.
+        from .recovery import run_program_checkpointed
+
+        return run_program_checkpointed(
+            sg, prog, pol, seeds=seeds, max_supersteps=max_supersteps)
     pol = prog.prepare_policy(sg, pol)
     state0 = prog.init(sg, seeds)
     budget = max_supersteps if max_supersteps is not None \

@@ -60,8 +60,10 @@ keeping gather/activate eager.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
+import time
 from typing import Optional
 
 import jax
@@ -92,12 +94,70 @@ __all__ = [
     "HostBlockedStore",
     "HostChunkStore",
     "HostGraph",
+    "StreamFailure",
     "host_graph",
     "host_traverse",
+    "inject_stream_faults",
     "run_program_host",
 ]
 
 _BLOCKED = ("blocked", "blocked_compact")
+
+
+# --------------------------------------------------------------------------
+# host-link fault tolerance
+# --------------------------------------------------------------------------
+class StreamFailure(RuntimeError):
+    """A host->device staging batch failed ``stream_retries + 1`` times in
+    a row.  Transient link hiccups never surface — the executor retries
+    with exponential backoff and counts them in ``IOStats.retries`` — so
+    this exception means the link is persistently down."""
+
+
+# Test-only injection point: a callable invoked once per staging attempt
+# (before the device_put batch); raising from it simulates a transient
+# host-link failure.  Kept module-global rather than threaded through the
+# executors because faults are an ambient property of the link, not of any
+# one traversal.
+_FAULT_HOOK = None
+
+
+@contextlib.contextmanager
+def inject_stream_faults(hook):
+    """Install ``hook()`` to run before every host->device staging batch
+    for the duration of the ``with`` block.  A raising hook simulates a
+    transient link failure; the executors' bounded retry must absorb it
+    (or surface :class:`StreamFailure` once the budget is spent)."""
+    global _FAULT_HOOK
+    prev = _FAULT_HOOK
+    _FAULT_HOOK = hook
+    try:
+        yield
+    finally:
+        _FAULT_HOOK = prev
+
+
+def _staged(pol: ExecutionPolicy, fn):
+    """Run ``fn`` (one batch's host->device staging) under the policy's
+    bounded retry-with-backoff.  Returns ``(result, n_retries)``; raises
+    :class:`StreamFailure` when ``stream_retries + 1`` attempts all fail.
+    Retries are safe by construction: staging is a pure read of pinned
+    host arrays — no state mutates until the shipped payload is used."""
+    attempts = int(pol.stream_retries) + 1
+    last = None
+    for a in range(attempts):
+        try:
+            if _FAULT_HOOK is not None:
+                _FAULT_HOOK()
+            return fn(), a
+        except Exception as e:  # noqa: BLE001 — any staging error is retryable
+            last = e
+            if a + 1 < attempts and pol.stream_backoff_s > 0:
+                time.sleep(pol.stream_backoff_s * (2 ** a))
+    raise StreamFailure(
+        f"host->device stream failed after {attempts} attempts "
+        f"(stream_retries={pol.stream_retries}): {last!r}"
+    ) from last
 
 
 def _pow2_at_least(k: int) -> int:
@@ -425,8 +485,10 @@ def _stream_chunks(hg: HostGraph, store: HostChunkStore, x, active,
     w_dummy = None if has_w else jnp.zeros((B, S), jnp.float32)
     host_bytes = 0
     peak = 0
+    retr = 0
 
     def ship(ids):
+        nonlocal retr
         k = len(ids)
         if k < B:  # last batch: pad with chunk 0, masked whole-chunk
             idx = np.zeros(B, np.int64)
@@ -441,11 +503,15 @@ def _stream_chunks(hg: HostGraph, store: HostChunkStore, x, active,
         if has_w:
             w = np.ascontiguousarray(store.w[idx])
             nb += w.nbytes
-            wd = jax.device_put(w)
-        else:
-            wd = w_dummy
-        return (jax.device_put(major), jax.device_put(minor), wd,
-                jax.device_put(valid)), nb
+
+        def put():
+            wd = jax.device_put(w) if has_w else w_dummy
+            return (jax.device_put(major), jax.device_put(minor), wd,
+                    jax.device_put(valid))
+
+        payload, r = _staged(pol, put)
+        retr += r
+        return payload, nb
 
     batches = [live[i:i + B] for i in range(0, len(live), B)]
     if batches:
@@ -475,6 +541,7 @@ def _stream_chunks(hg: HostGraph, store: HostChunkStore, x, active,
         bytes_moved=_wrap_i32(n_live * S * rec),
         x_fetches=jnp.zeros((), jnp.int32),
         host_bytes=_wrap_i32(host_bytes),
+        retries=_wrap_i32(retr),
     )
     return y[:n], st
 
@@ -569,6 +636,7 @@ def _stream_tiles(hg: HostGraph, x, active, sr: Semiring, *, direction: str,
         else (lambda a, b: a + b)
     host_bytes = 0
     peak = 0
+    retr = 0
 
     if live.size:
         # live runs: group consecutive live steps by ORIGINAL run id (the
@@ -639,7 +707,11 @@ def _stream_tiles(hg: HostGraph, x, active, sr: Semiring, *, direction: str,
             arrs = (tiles, perm, dbid_b, sbid_b, first_b, last_b, accum_b,
                     nact)
             nb = sum(a.nbytes for a in arrs)
-            return tuple(jax.device_put(a) for a in arrs), nb
+            nonlocal retr
+            payload, r = _staged(
+                pol, lambda: tuple(jax.device_put(a) for a in arrs))
+            retr += r
+            return payload, nb
 
         flushed_before = np.zeros(nDB, bool)
         cur_pay, cur_nb = ship(batches[0][0])
@@ -690,12 +762,13 @@ def _stream_tiles(hg: HostGraph, x, active, sr: Semiring, *, direction: str,
         bytes_moved=_wrap_i32(fetched * tile_bytes),
         x_fetches=_wrap_i32(xf),
         host_bytes=_wrap_i32(host_bytes),
+        retries=_wrap_i32(retr),
     )
     return y, st
 
 
 def _host_p2p(hg: HostGraph, x, active, sr: Semiring, *, direction: str,
-              y_init, ecap: int):
+              y_init, ecap: int, pol: ExecutionPolicy):
     """Point-to-point host path: numpy row-exact gather plan shipped to a
     jitted scatter tail — lane-for-lane the device :func:`p2p_spmv`.
 
@@ -743,10 +816,16 @@ def _host_p2p(hg: HostGraph, x, active, sr: Semiring, *, direction: str,
     payload = [major, minor, valid] + ([ew] if has_w else [])
     nb = sum(a.nbytes for a in payload)
     hg._note_stage(nb)
-    dm = jax.device_put(major)
-    dn = jax.device_put(minor)
-    dv = jax.device_put(valid)
-    dw = jax.device_put(ew) if has_w else dv  # unused operand when not has_w
+
+    def put():
+        dm = jax.device_put(major)
+        dn = jax.device_put(minor)
+        dv = jax.device_put(valid)
+        # dw: unused operand when not has_w
+        dw = jax.device_put(ew) if has_w else dv
+        return dm, dn, dv, dw
+
+    (dm, dn, dv, dw), retr = _staged(pol, put)
     run = _p2p_tail_fn(sr, n, has_w, direction == "out")
     y = run(y0, xp, dm, dn, dw, dv)
 
@@ -760,6 +839,7 @@ def _host_p2p(hg: HostGraph, x, active, sr: Semiring, *, direction: str,
         bytes_moved=_wrap_i32(total * rec),
         x_fetches=jnp.zeros((), jnp.int32),
         host_bytes=_wrap_i32(nb),
+        retries=_wrap_i32(retr),
     )
     return y, st
 
@@ -806,7 +886,7 @@ def _host_dispatch(hg, x, active, sr, *, direction, reverse, y_init, pol):
     )
     if use_p2p:
         return _host_p2p(hg, x, active, sr, direction=direction,
-                         y_init=y_init, ecap=ecap)
+                         y_init=y_init, ecap=ecap, pol=pol)
     return _host_multicast(hg, x, active, sr, direction=direction,
                            reverse=reverse, y_init=y_init, pol=pol)
 
@@ -904,6 +984,9 @@ def run_program_host(
     *,
     seeds=None,
     max_supersteps: Optional[int] = None,
+    checkpoint=None,
+    resume: bool = False,
+    _plan=None,
 ):
     """:func:`~repro.core.program.run_program`'s host-residency twin: the
     same superstep body, but as an eager Python loop (each superstep must
@@ -911,7 +994,14 @@ def run_program_host(
     ``apply`` run jitted (cached per program config + policy);
     ``gather``/``activate`` run eager so their traverse calls hit the
     streaming executors.  Supersteps, values, and all order-invariant
-    IOStats fields match the device driver's ``lax.while_loop`` exactly."""
+    IOStats fields match the device driver's ``lax.while_loop`` exactly.
+
+    ``checkpoint`` / ``resume`` / ``_plan`` mirror the checkpointed device
+    driver (see :mod:`repro.core.recovery`): the loop is already eager, so
+    snapshots drop in at superstep boundaries with no driver surgery —
+    resume-exactness (values AND the full IOStats ledger, ``host_bytes``
+    and ``retries`` included) follows because the accumulated ledger is
+    part of the snapshot."""
     if not getattr(sg, "is_host_view", False):
         raise ValueError(
             "residency='host' policy met a device-resident graph: this "
@@ -935,23 +1025,54 @@ def run_program_host(
                  else prog.max_supersteps(sg))
     frontier_fn, apply_fn = sg._hooks(prog, pol)
 
+    from .program import ProgramResult
+
+    ctx = None
+    if checkpoint is not None:
+        from .recovery import _CheckpointCtx, run_fingerprint
+
+        ctx = _CheckpointCtx(checkpoint,
+                             run_fingerprint(sg, prog, pol, seeds))
+
     io = IOStats.zero()
     it = 0
     done = bool(prog.converged(sg, state, None)) \
         if prog.check_initial_convergence else False
-    while not done and it < budget:
-        fr = frontier_fn(state)
-        gathered, st = prog.gather(sg, state, fr, pol)
-        state, activated = apply_fn(state, gathered)
-        state, st_act = prog.activate(sg, state, pol)
-        io = io + st
-        if st_act is not None:
-            io = io + st_act
-        io = io._replace(supersteps=io.supersteps + 1)
-        it += 1
-        done = bool(prog.converged(sg, state, activated))
+    if resume and ctx is not None:
+        hit = ctx.try_restore(sg, state)
+        if hit is not None:
+            state, io, it, finished = hit
+            if finished:
+                return ProgramResult(prog.finalize(sg, state),
+                                     jnp.asarray(it, jnp.int32), io, state)
+            done = False  # an unfinished snapshot is mid-loop by definition
 
-    from .program import ProgramResult
+    from .recovery import maybe_fail
+
+    try:
+        while not done and it < budget:
+            maybe_fail(_plan, it)
+            fr = frontier_fn(state)
+            gathered, st = prog.gather(sg, state, fr, pol)
+            state, activated = apply_fn(state, gathered)
+            state, st_act = prog.activate(sg, state, pol)
+            io = io + st
+            if st_act is not None:
+                io = io + st_act
+            io = io._replace(supersteps=io.supersteps + 1)
+            it += 1
+            done = bool(prog.converged(sg, state, activated))
+            finished = done or it >= budget
+            if ctx is not None and ctx.due(it, finished):
+                ctx.save(it, finished, state, io, frontier_fn(state).active)
+    except BaseException:
+        if ctx is not None:
+            ctx.wait()  # drain any in-flight async save before unwinding
+        raise
+    if ctx is not None:
+        if it == 0:  # zero-superstep runs still leave a restorable record
+            ctx.save(0, True, state, io, jnp.zeros(sg.n, bool))
+        ctx.wait()
 
     return ProgramResult(prog.finalize(sg, state), jnp.asarray(it, jnp.int32),
                          io, state)

@@ -97,6 +97,13 @@ class IOStats(NamedTuple):
       host and device runs of the same policy agree on every other
       order-invariant field and differ here alone, which is why the
       host-vs-device parity checks exclude it.
+    retries: transient host->device transfer failures absorbed by the
+      ``residency='host'`` streaming path's bounded retry-with-backoff
+      (``ExecutionPolicy.stream_retries``) — the observable cost of
+      recovery.  Zero on every device-resident path and on any fault-free
+      host run, so like ``host_bytes`` it is excluded from cross-residency
+      parity checks (a retried batch re-ships the same bytes and produces
+      the same values; only this odometer moves).
 
     All counters are int32 (JAX's default integer without x64), so each
     wraps at 2^31 of its unit — ~2 GiB for ``bytes_moved``, ~2.1e9 edge
@@ -113,11 +120,12 @@ class IOStats(NamedTuple):
     bytes_moved: jnp.ndarray
     x_fetches: jnp.ndarray
     host_bytes: jnp.ndarray
+    retries: jnp.ndarray = 0
 
     @staticmethod
     def zero() -> "IOStats":
         z = jnp.zeros((), dtype=jnp.int32)
-        return IOStats(z, z, z, z, z, z, z, z)
+        return IOStats(z, z, z, z, z, z, z, z, z)
 
     def __add__(self, other: "IOStats") -> "IOStats":  # type: ignore[override]
         return IOStats(*(a + b for a, b in zip(self, other)))
@@ -487,6 +495,7 @@ def sem_spmv(
                 bytes_moved=st.bytes_moved + store.chunk_size * rec_bytes,
                 x_fetches=st.x_fetches,
                 host_bytes=st.host_bytes,
+                retries=st.retries,
             )
             return y, st
 
@@ -582,6 +591,7 @@ def compact_spmv(
             * _store_record_bytes(store.w),
             x_fetches=jnp.zeros((), jnp.int32),
             host_bytes=jnp.zeros((), jnp.int32),
+            retries=jnp.zeros((), jnp.int32),
         )
         return y[:n], st
 
@@ -666,5 +676,6 @@ def p2p_spmv(
         bytes_moved=(total_edges * _store_record_bytes(w)).astype(jnp.int32),
         x_fetches=jnp.zeros((), jnp.int32),
         host_bytes=jnp.zeros((), jnp.int32),
+        retries=jnp.zeros((), jnp.int32),
     )
     return y[:n], st

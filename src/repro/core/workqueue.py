@@ -1,0 +1,341 @@
+"""Lease-based work queue for multi-source sweeps.
+
+Exact betweenness and diameter sweeps are embarrassingly parallel across
+source sets — and therefore the natural unit of *elasticity*: a sweep over
+512 sources should survive any individual worker dying mid-shard, and
+should resume after a full crash without recomputing finished shards.
+Following the grandiso-cloud pattern (isolate ALL growing state in one
+dropout-resilient queue so unsupervised workers can join, die, and resume
+freely), this module keeps every byte of sweep progress in a
+:class:`WorkQueue`:
+
+  * **leases, not assignments** — a worker *leases* a task for a bounded
+    time; completing it needs the lease token ``(tid, attempt)``, so a
+    worker presumed dead whose result arrives late is simply ignored
+    (stale token), and a lease that expires puts the task back on the
+    queue for anyone else.  Tasks failing ``max_attempts`` times move to
+    the dead-letter list instead of wedging the sweep.
+  * **order-invariant merge** — per-task results are stored by task id
+    and folded in canonical id order, so the merged result is a pure
+    function of the task set: bitwise-identical whatever the completion
+    order, worker count, or number of mid-sweep deaths.  (The fold order
+    is fixed even for non-associative float combines.)
+  * **checkpointable** — the queue's growing state (completed mask,
+    attempt counts, dead-letter mask, stacked results) is a fixed-shape
+    pytree snapshotted through the same atomic store as the BSP drivers
+    (:mod:`repro.checkpoint`), with a task-set digest in ``extra.json``
+    guarding resume against a different sharding.  Leases are
+    deliberately NOT checkpointed: they are promises by workers that died
+    with the process, so restart re-issues them — at-least-once execution
+    with idempotent (replace-on-complete) results.
+
+Time is injectable (:class:`ManualClock`) so lease expiry is testable
+without sleeping.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from pathlib import Path
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+from ..checkpoint import (
+    CheckpointManager,
+    latest_step,
+    load_extra,
+    restore_checkpoint,
+)
+
+__all__ = [
+    "Lease",
+    "ManualClock",
+    "QueueMismatchError",
+    "WorkQueue",
+    "run_workers",
+    "shard_sources",
+]
+
+
+class QueueMismatchError(RuntimeError):
+    """A queue checkpoint was written for a *different* task set (other
+    sources, other sharding).  Restoring it would mis-attribute results
+    to tasks, so the digest mismatch is an error."""
+
+
+class ManualClock:
+    """A deterministic clock for tests: time moves only when told to."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = float(t0)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += float(dt)
+
+
+@dataclasses.dataclass(frozen=True)
+class Lease:
+    """A worker's bounded claim on one task.  ``(tid, attempt)`` is the
+    token: :meth:`WorkQueue.complete` rejects any other attempt's token,
+    which is what makes a late result from a presumed-dead worker
+    harmless."""
+
+    tid: int
+    attempt: int
+    payload: Any
+    expires: float
+
+
+class WorkQueue:
+    """In-process lease/retry/dead-letter queue over a fixed task list.
+
+    ``tasks`` is a sequence of payloads (for source sweeps: numpy arrays
+    of source vertex ids — see :func:`shard_sources`).  ``result_template``
+    is a zeros-like array of one task's result shape/dtype; required for
+    :meth:`checkpoint`/:meth:`resume` (results stack into one fixed-shape
+    array) and for :meth:`merge`'s identity.
+    """
+
+    def __init__(
+        self,
+        tasks: Sequence[Any],
+        *,
+        lease_timeout: float = 30.0,
+        max_attempts: int = 3,
+        result_template: Optional[np.ndarray] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        self.tasks = list(tasks)
+        self.lease_timeout = float(lease_timeout)
+        self.max_attempts = int(max_attempts)
+        self.result_template = (
+            None if result_template is None else np.asarray(result_template)
+        )
+        self._clock = clock
+        T = len(self.tasks)
+        self.completed = np.zeros(T, bool)
+        self.attempts = np.zeros(T, np.int32)
+        self.dead = np.zeros(T, bool)
+        self._results: dict = {}
+        self._leases: dict = {}  # tid -> Lease (at most one live per task)
+        self._saves = 0
+
+    # ---------------------------------------------------------------- state
+    @property
+    def num_tasks(self) -> int:
+        return len(self.tasks)
+
+    @property
+    def finished(self) -> bool:
+        """Nothing left to lease, now or after any expiry."""
+        return bool(np.all(self.completed | self.dead))
+
+    @property
+    def dead_letters(self) -> list:
+        return [int(t) for t in np.flatnonzero(self.dead)]
+
+    def _expire(self) -> None:
+        now = self._clock()
+        for tid in [t for t, l in self._leases.items() if l.expires <= now]:
+            del self._leases[tid]
+            if self.attempts[tid] >= self.max_attempts:
+                self.dead[tid] = True
+
+    # ---------------------------------------------------------------- lease
+    def lease(self) -> Optional[Lease]:
+        """Claim the lowest-id available task, or None when every pending
+        task is currently leased (or the queue is finished).  Expired
+        leases are reaped first, so a crashed worker's task is re-issued
+        by the very next ``lease()`` after its timeout."""
+        self._expire()
+        for tid in range(len(self.tasks)):
+            if (self.completed[tid] or self.dead[tid]
+                    or tid in self._leases):
+                continue
+            self.attempts[tid] += 1
+            lease = Lease(tid, int(self.attempts[tid]), self.tasks[tid],
+                          self._clock() + self.lease_timeout)
+            self._leases[tid] = lease
+            return lease
+        return None
+
+    def complete(self, lease: Lease, result) -> bool:
+        """Commit ``result`` for the leased task.  Returns False (and
+        commits nothing) for a stale token — an expired/re-issued lease,
+        or a task already completed by another attempt."""
+        cur = self._leases.get(lease.tid)
+        if (cur is None or cur.attempt != lease.attempt
+                or self.completed[lease.tid]):
+            return False
+        del self._leases[lease.tid]
+        self._results[lease.tid] = np.asarray(result)
+        self.completed[lease.tid] = True
+        self.dead[lease.tid] = False
+        return True
+
+    def fail(self, lease: Lease) -> bool:
+        """Explicitly give a lease back (worker noticed its own trouble)
+        instead of waiting out the timeout.  Same staleness rules as
+        :meth:`complete`."""
+        cur = self._leases.get(lease.tid)
+        if cur is None or cur.attempt != lease.attempt:
+            return False
+        del self._leases[lease.tid]
+        if self.attempts[lease.tid] >= self.max_attempts:
+            self.dead[lease.tid] = True
+        return True
+
+    # ---------------------------------------------------------------- merge
+    def merge(self, combine: Callable[[Any, Any], Any], init=None):
+        """Fold completed results in canonical task-id order.
+
+        The fold order is a property of the task SET, never of the
+        completion order, so the merge is deterministic across worker
+        counts and death schedules even for non-associative float
+        combines.  ``init`` defaults to ``zeros_like(result_template)``.
+        """
+        if init is None:
+            if self.result_template is None:
+                raise ValueError("merge needs init= or a result_template")
+            init = np.zeros_like(self.result_template)
+        out = init
+        for tid in range(len(self.tasks)):
+            if self.completed[tid]:
+                out = combine(out, self._results[tid])
+        return out
+
+    # ------------------------------------------------------------ persistence
+    def _digest(self) -> str:
+        h = hashlib.sha1()
+        h.update(np.int64(len(self.tasks)).tobytes())
+        for t in self.tasks:
+            a = np.asarray(t)
+            h.update(str(a.dtype).encode())
+            h.update(np.asarray(a.shape).tobytes())
+            h.update(a.tobytes())
+        return h.hexdigest()
+
+    def _require_template(self, what: str) -> np.ndarray:
+        if self.result_template is None:
+            raise ValueError(f"{what} needs result_template= at construction")
+        return self.result_template
+
+    def _state_tree(self) -> dict:
+        tpl = self._require_template("checkpoint()")
+        stacked = np.zeros((len(self.tasks),) + tpl.shape, tpl.dtype)
+        for tid, r in self._results.items():
+            stacked[tid] = r
+        return {
+            "attempts": self.attempts.copy(),
+            "completed": self.completed.copy(),
+            "dead": self.dead.copy(),
+            "results": stacked,
+        }
+
+    def checkpoint(self, directory: str | Path, *, keep: int = 2) -> None:
+        """Snapshot queue progress through the atomic checkpoint store
+        (tmp+rename; a crash mid-save leaves the previous snapshot
+        intact).  Live leases are NOT saved — see the module docstring."""
+        mgr = CheckpointManager(directory, keep=keep)
+        self._saves += 1
+        mgr.save(self._saves, self._state_tree(),
+                 extra={"tasks": self._digest(),
+                        "n_completed": int(self.completed.sum())})
+
+    def resume(self, directory: str | Path) -> bool:
+        """Restore progress from the newest snapshot under ``directory``.
+        Returns False when none exists (fresh start); raises
+        :class:`QueueMismatchError` when the snapshot belongs to a
+        different task set."""
+        tpl = self._require_template("resume()")
+        step = latest_step(directory)
+        if step is None:
+            return False
+        extra = load_extra(directory, step) or {}
+        if extra.get("tasks") != self._digest():
+            raise QueueMismatchError(
+                f"queue checkpoint at {directory} (step {step}) was written "
+                f"for a different task set/sharding; refusing to resume"
+            )
+        T = len(self.tasks)
+        target = {
+            "attempts": np.zeros(T, np.int32),
+            "completed": np.zeros(T, bool),
+            "dead": np.zeros(T, bool),
+            "results": np.zeros((T,) + tpl.shape, tpl.dtype),
+        }
+        tree, _ = restore_checkpoint(directory, target, step, as_numpy=True)
+        self.attempts = np.asarray(tree["attempts"]).copy()
+        self.completed = np.asarray(tree["completed"]).copy()
+        self.dead = np.asarray(tree["dead"]).copy()
+        self._results = {
+            int(tid): np.asarray(tree["results"][tid])
+            for tid in np.flatnonzero(self.completed)
+        }
+        self._leases = {}  # ephemeral: holders died with the process
+        self._saves = step
+        return True
+
+
+def shard_sources(sources, shard_size: int) -> list:
+    """Split a source vertex set into queue task payloads of at most
+    ``shard_size`` sources each (the work unit of a sweep: one BSP run
+    per shard)."""
+    src = np.asarray(sources).reshape(-1)
+    if shard_size < 1:
+        raise ValueError("shard_size must be >= 1")
+    return [src[i:i + shard_size] for i in range(0, len(src), shard_size)]
+
+
+def run_workers(
+    queue: WorkQueue,
+    work_fn: Callable[[Any], Any],
+    *,
+    deaths: Sequence[tuple] = (),
+    checkpoint_dir: Optional[str | Path] = None,
+    checkpoint_every: int = 1,
+) -> WorkQueue:
+    """Drive ``queue`` to completion through injected worker deaths.
+
+    A deterministic simulation of a worker pool: tasks are leased one at
+    a time; a lease whose ``(tid, attempt)`` is in ``deaths`` simulates a
+    worker dying mid-task — its computed result is DISCARDED and the
+    lease is left to expire (the queue's clock must be a
+    :class:`ManualClock`, which this driver advances past the timeout
+    when only orphaned leases remain).  Everything else completes
+    normally.  With ``checkpoint_dir``, the queue snapshots after every
+    ``checkpoint_every`` completions.
+
+    Because results merge in canonical task order, the final
+    :meth:`WorkQueue.merge` is bitwise-identical with any ``deaths``
+    schedule whose tasks still complete within ``max_attempts`` — the
+    property ``tests/test_recovery.py`` and the smoke gate assert.
+    """
+    deaths = set((int(t), int(a)) for t, a in deaths)
+    since_save = 0
+    while not queue.finished:
+        lease = queue.lease()
+        if lease is None:
+            # Only orphaned leases remain: let them time out.
+            if isinstance(queue._clock, ManualClock):
+                queue._clock.advance(queue.lease_timeout * 1.001)
+            else:  # pragma: no cover - real-clock fallback
+                time.sleep(queue.lease_timeout * 0.1)
+            continue
+        if (lease.tid, lease.attempt) in deaths:
+            continue  # worker died holding the lease; result lost
+        if queue.complete(lease, work_fn(lease.payload)):
+            since_save += 1
+            if checkpoint_dir is not None and since_save >= checkpoint_every:
+                queue.checkpoint(checkpoint_dir)
+                since_save = 0
+    if checkpoint_dir is not None:
+        queue.checkpoint(checkpoint_dir)
+    return queue

@@ -76,6 +76,7 @@ def _host_result(values, *, supersteps=0, state=None,
         bytes_moved=_i32(bytes_moved),
         x_fetches=z,
         host_bytes=z,
+        retries=z,
     )
     return ProgramResult(values, _i32(supersteps), io, state)
 
@@ -366,17 +367,25 @@ class Graph:
         seeds=None,
         policy: Optional[ExecutionPolicy] = None,
         max_supersteps: Optional[int] = None,
+        checkpoint=None,
+        resume: bool = False,
     ) -> ProgramResult:
         """Run any :class:`~repro.core.VertexProgram` on this graph.
 
         This is the extension point: the program sees the same engine —
         and the same cached views — as the built-in algorithms.  See
         ``examples/custom_program.py`` for a complete ~30-line program.
+
+        ``checkpoint=CheckpointSpec(dir)`` makes the run fault-tolerant
+        (superstep snapshots; ``resume=True`` continues a killed run,
+        bitwise-equal to an uninterrupted one) — see
+        :mod:`repro.core.recovery`.
         """
         pol = policy if policy is not None else program.default_policy
         sem = self._sem(pol, program)
         return run_program(sem, program, policy, seeds=seeds,
-                           max_supersteps=max_supersteps)
+                           max_supersteps=max_supersteps,
+                           checkpoint=checkpoint, resume=resume)
 
     # ------------------------------------------------------- the library
     def bfs(
@@ -385,6 +394,8 @@ class Graph:
         *,
         policy: Optional[ExecutionPolicy] = None,
         max_supersteps: Optional[int] = None,
+        checkpoint=None,
+        resume: bool = False,
     ) -> ProgramResult:
         """(Multi-source) BFS.  ``values``: int32 distances —
         ``[n]`` for a scalar source, ``[n, K]`` for K sources
@@ -397,7 +408,8 @@ class Graph:
         seeds = jnp.atleast_1d(jnp.asarray(sources, jnp.int32))
         prog = BFSProgram()
         res = run_program(self._sem(policy, prog), prog, policy, seeds=seeds,
-                          max_supersteps=max_supersteps)
+                          max_supersteps=max_supersteps,
+                          checkpoint=checkpoint, resume=resume)
         return res._replace(values=res.values[:, 0] if scalar else res.values)
 
     def pagerank(
@@ -408,6 +420,8 @@ class Graph:
         tol: float = 1e-3,
         max_iters: int = 100,
         policy: Optional[ExecutionPolicy] = None,
+        checkpoint=None,
+        resume: bool = False,
     ) -> ProgramResult:
         """PageRank.  ``values``: f32[n] ranks (sum ≈ 1).
 
@@ -421,7 +435,8 @@ class Graph:
             damping=damping, tol=tol
         )
         return run_program(self._sem(policy, prog), prog, policy,
-                           max_supersteps=max_iters)
+                           max_supersteps=max_iters,
+                           checkpoint=checkpoint, resume=resume)
 
     def coreness(
         self,
@@ -445,6 +460,8 @@ class Graph:
         mode: str = "multi",
         policy: Optional[ExecutionPolicy] = None,
         max_supersteps: Optional[int] = None,
+        checkpoint=None,
+        resume: bool = False,
     ) -> ProgramResult:
         """Brandes betweenness centrality from K sources.  ``values``:
         f32[n] (un-normalized; exact when ``sources`` is every vertex).
@@ -476,7 +493,8 @@ class Graph:
                     "execution; policy is not supported (use mode='multi')"
                 )
             res = run_program(self.device(), FusedBCProgram(), seeds=sources,
-                              max_supersteps=max_supersteps)
+                              max_supersteps=max_supersteps,
+                              checkpoint=checkpoint, resume=resume)
             return res._replace(values=_finish(res.values, sources))
         sem = self._sem(policy, None, need_reverse=True)
         if mode == "uni":
@@ -484,11 +502,18 @@ class Graph:
             io = IOStats.zero()
             steps = jnp.zeros((), jnp.int32)
             for i in range(sources.shape[0]):
+                # per-source checkpoint subtree: a kill mid-sweep resumes
+                # at the interrupted source, finished sources replay from
+                # their final snapshots.
+                ck = checkpoint.child(f"src_{i:05d}") \
+                    if checkpoint is not None else None
                 b, st, it = _bc_sync(sem, sources[i : i + 1],
-                                     max_supersteps, policy)
+                                     max_supersteps, policy,
+                                     checkpoint=ck, resume=resume)
                 bc, io, steps = bc + b, io + st, steps + it
             return ProgramResult(bc, steps, io)
-        bc, io, steps = _bc_sync(sem, sources, max_supersteps, policy)
+        bc, io, steps = _bc_sync(sem, sources, max_supersteps, policy,
+                                 checkpoint=checkpoint, resume=resume)
         return ProgramResult(bc, steps, io)
 
     def diameter(

@@ -1,0 +1,425 @@
+"""Fault tolerance: checkpoint durability, resume-exact BSP, stream retry,
+and the lease-based work queue.
+
+The contract under test is the strongest one the library can make: a run
+killed at ANY superstep and resumed is *bitwise-equal* — values, superstep
+count, and the full IOStats ledger (``host_bytes`` and ``retries``
+included) — to a run that was never interrupted, on every backend and both
+residencies; and a multi-source sweep whose workers die mid-lease merges
+to exactly the same bits as one where nobody died.
+"""
+import os
+import shutil
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.checkpoint import (
+    CheckpointCorruptionError,
+    CheckpointManager,
+    latest_step,
+    load_extra,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.core import (
+    CheckpointMismatchError,
+    CheckpointSpec,
+    DeviceFailure,
+    ExecutionPolicy,
+    FailurePlan,
+    ManualClock,
+    QueueMismatchError,
+    StreamFailure,
+    WorkQueue,
+    inject_stream_faults,
+    run_program,
+    run_supervised,
+    run_workers,
+    shard_sources,
+)
+from repro.algs.bfs import BFSProgram
+from repro.algs.pagerank import PageRankPullProgram, PageRankPushProgram
+from repro.graph.generators import rmat
+
+pytestmark = pytest.mark.kernel
+
+BACKENDS = ("scan", "compact", "blocked", "blocked_compact")
+
+
+@pytest.fixture(scope="module")
+def host():
+    # Small enough that kill-at-every-superstep sweeps stay fast, chunked
+    # small enough that host streaming ships several batches per superstep.
+    return rmat(6, edge_factor=6, seed=3, symmetrize=True)
+
+
+def session(host):
+    return repro.Graph(host, chunk_size=64, bd=32, bs=32)
+
+
+def views(host):
+    s = session(host)
+    return s.device(), s.host_view()
+
+
+def assert_identical(a, b, *, skip=()):
+    """Full bitwise equality: values, supersteps, EVERY IOStats field."""
+    assert np.array_equal(np.asarray(a.values), np.asarray(b.values))
+    assert int(a.supersteps) == int(b.supersteps)
+    for name, x, y in zip(a.iostats._fields, a.iostats, b.iostats):
+        if name in skip:
+            continue
+        assert int(x) == int(y), f"IOStats.{name}: {int(x)} != {int(y)}"
+
+
+# ------------------------------------------------------------ store
+class TestStoreDurability:
+    def test_tmp_partial_and_stray_entries_ignored(self, tmp_path):
+        tree = {"a": jnp.arange(5), "b": jnp.ones(3)}
+        save_checkpoint(tmp_path, 4, tree)
+        # a crashed save leaves a .tmp; stray dirs happen to real operators
+        (tmp_path / "step_00000099.tmp").mkdir()
+        (tmp_path / "step_junk").mkdir()
+        (tmp_path / "step_").mkdir()
+        assert latest_step(tmp_path) == 4
+        restored, step = restore_checkpoint(
+            tmp_path, {"a": jnp.zeros(5, jnp.int32), "b": jnp.zeros(3)})
+        assert step == 4
+        assert np.array_equal(np.asarray(restored["a"]), np.arange(5))
+        # retention gc must also step over the strays
+        mgr = CheckpointManager(tmp_path, keep=1)
+        mgr.save(7, tree)
+        assert latest_step(tmp_path) == 7
+
+    def test_corrupt_shard_is_an_error(self, tmp_path):
+        save_checkpoint(tmp_path, 1, {"a": jnp.arange(4), "b": jnp.ones(2)})
+        shard = tmp_path / "step_00000001" / "proc0.npz"
+        np.savez(shard, a0=np.arange(4))  # one leaf missing
+        with pytest.raises(CheckpointCorruptionError, match="manifest"):
+            restore_checkpoint(
+                tmp_path, {"a": jnp.zeros(4, jnp.int32), "b": jnp.zeros(2)})
+
+    def test_extra_metadata_round_trip(self, tmp_path):
+        save_checkpoint(tmp_path, 2, {"a": jnp.zeros(1)},
+                        extra={"graph": "abc", "superstep": 2})
+        assert load_extra(tmp_path, 2) == {"graph": "abc", "superstep": 2}
+        assert load_extra(tmp_path, 3) is None
+
+    def test_as_numpy_preserves_dtypes(self, tmp_path):
+        save_checkpoint(tmp_path, 1, {"r": np.arange(3, dtype=np.float64)})
+        tree, _ = restore_checkpoint(
+            tmp_path, {"r": np.zeros(3, np.float64)}, as_numpy=True)
+        assert tree["r"].dtype == np.float64
+
+
+# ------------------------------------------------------------ resume-exact
+class TestResumeExact:
+    def test_kill_at_every_superstep(self, host, tmp_path):
+        """The headline contract, exhaustively on one backend: crash at
+        superstep k for EVERY k, resume, and the result is bitwise the
+        uninterrupted run's — wherever k falls relative to every_k."""
+        sem, _ = views(host)
+        prog = PageRankPullProgram(tol=1e-4)
+        base = run_program(sem, prog, max_supersteps=30)
+        total = int(base.supersteps)
+        assert total > 5
+        for k in range(total):
+            d = tmp_path / f"kill_{k}"
+            res, rep = run_supervised(
+                sem, prog, max_supersteps=30,
+                checkpoint=CheckpointSpec(d, every_k=3),
+                plan=FailurePlan({k: "crash"}))
+            assert rep.restarts == 1
+            assert_identical(base, res)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("residency", ("device", "host"))
+    def test_backends_and_residencies(self, host, tmp_path, backend,
+                                      residency):
+        """Spot kills on every backend x residency: PageRank killed twice
+        (once off-cadence), BFS killed once.  host_bytes and retries are
+        compared too — same-residency runs must agree on the whole
+        ledger."""
+        s = session(host)
+        pol = ExecutionPolicy(backend=backend, residency=residency)
+        prog = PageRankPullProgram(tol=1e-4)
+        sem = s._sem(pol, prog)  # the view the façade would run this on
+        base = run_program(sem, prog, pol, max_supersteps=25)
+        res, rep = run_supervised(
+            sem, prog, pol, max_supersteps=25,
+            checkpoint=CheckpointSpec(tmp_path / "pr", every_k=2),
+            plan=FailurePlan({3: "crash", 7: "crash"}))
+        assert rep.restarts == 2
+        assert_identical(base, res)
+
+        bfs = BFSProgram()
+        seeds = jnp.asarray([0], jnp.int32)
+        sem = s._sem(pol, bfs)
+        base_b = run_program(sem, bfs, pol, seeds=seeds)
+        res_b, _ = run_supervised(
+            sem, bfs, pol, seeds=seeds,
+            checkpoint=CheckpointSpec(tmp_path / "bfs", every_k=2),
+            plan=FailurePlan({2: "crash"}))
+        assert_identical(base_b, res_b)
+
+    @pytest.mark.parametrize("residency", ("device", "host"))
+    def test_betweenness_phase_checkpoints(self, host, tmp_path, residency):
+        """A kill in the backward sweep resumes there; the forward phase
+        replays from its final snapshot (its own `fwd/` subtree)."""
+        s_base, s_ck = session(host), session(host)
+        pol = ExecutionPolicy(backend="scan", residency=residency)
+        src = jnp.arange(3)
+        base = s_base.betweenness(src, policy=pol)
+        spec = CheckpointSpec(tmp_path / "bc", every_k=2)
+        ck = s_ck.betweenness(src, policy=pol, checkpoint=spec)
+        assert_identical(base, ck)
+        assert (tmp_path / "bc" / "fwd").is_dir()
+        assert (tmp_path / "bc" / "bwd").is_dir()
+        again = s_ck.betweenness(src, policy=pol, checkpoint=spec,
+                                 resume=True)
+        assert_identical(base, again)
+
+    def test_checkpoint_overhead_free_parity(self, host, tmp_path):
+        """checkpoint= with no crash must not perturb anything, on every
+        backend (the segmented driver replaces the single while_loop)."""
+        s = session(host)
+        prog = PageRankPushProgram(tol=1e-4)
+        for backend in BACKENDS:
+            pol = ExecutionPolicy(backend=backend)
+            sem = s._sem(pol, prog)
+            base = run_program(sem, prog, pol, max_supersteps=25)
+            res = run_program(
+                sem, prog, pol, max_supersteps=25,
+                checkpoint=CheckpointSpec(tmp_path / backend, every_k=4))
+            assert_identical(base, res)
+
+    def test_finished_run_resumes_instantly(self, host, tmp_path):
+        sem, _ = views(host)
+        prog = PageRankPullProgram(tol=1e-4)
+        spec = CheckpointSpec(tmp_path, every_k=4)
+        first = run_program(sem, prog, max_supersteps=25, checkpoint=spec)
+        again = run_program(sem, prog, max_supersteps=25, checkpoint=spec,
+                            resume=True)
+        assert_identical(first, again)
+
+    def test_fingerprint_mismatch_raises(self, host, tmp_path):
+        sem, _ = views(host)
+        spec = CheckpointSpec(tmp_path, every_k=2)
+        run_program(sem, PageRankPullProgram(tol=1e-3), max_supersteps=10,
+                    checkpoint=spec)
+        with pytest.raises(CheckpointMismatchError, match="program"):
+            run_program(sem, PageRankPullProgram(tol=1e-5),
+                        max_supersteps=10, checkpoint=spec, resume=True)
+        with pytest.raises(CheckpointMismatchError, match="program"):
+            run_program(sem, BFSProgram(), seeds=jnp.asarray([0], jnp.int32),
+                        checkpoint=spec, resume=True)
+        with pytest.raises(CheckpointMismatchError, match="seeds"):
+            # same program class/config, different seeds
+            spec2 = CheckpointSpec(tmp_path / "s", every_k=2)
+            run_program(sem, BFSProgram(), seeds=jnp.asarray([0], jnp.int32),
+                        checkpoint=spec2)
+            run_program(sem, BFSProgram(), seeds=jnp.asarray([1], jnp.int32),
+                        checkpoint=spec2, resume=True)
+
+    def test_checkpoint_rejects_tracers(self, host, tmp_path):
+        import jax
+
+        sem, _ = views(host)
+        with pytest.raises(ValueError, match="eagerly"):
+            jax.jit(lambda: run_program(
+                sem, PageRankPullProgram(), max_supersteps=5,
+                checkpoint=CheckpointSpec(tmp_path)))()
+
+
+# ------------------------------------------------------------ stream retry
+class TestStreamRetry:
+    def test_transient_faults_absorbed_and_counted(self, host):
+        _, hv = views(host)
+        prog = PageRankPullProgram(tol=1e-4)
+        pol = ExecutionPolicy(residency="host", stream_backoff_s=0.0)
+        base = run_program(hv, prog, pol, max_supersteps=10)
+        assert int(base.iostats.retries) == 0
+
+        calls = [0]
+
+        def flaky():  # attempts 2 and 5 fail once each
+            calls[0] += 1
+            if calls[0] in (2, 5):
+                raise OSError("transient link drop")
+
+        with inject_stream_faults(flaky):
+            res = run_program(hv, prog, pol, max_supersteps=10)
+        assert int(res.iostats.retries) == 2
+        # values and every other ledger field are untouched by the retries
+        assert_identical(base, res, skip=("retries",))
+
+    def test_exhaustion_raises_stream_failure(self, host):
+        _, hv = views(host)
+        pol = ExecutionPolicy(residency="host", stream_retries=2,
+                              stream_backoff_s=0.0)
+
+        def down():
+            raise OSError("link down")
+
+        with inject_stream_faults(down):
+            with pytest.raises(StreamFailure, match="after 3 attempts"):
+                run_program(hv, PageRankPullProgram(), pol, max_supersteps=5)
+
+    def test_policy_validation(self):
+        with pytest.raises(ValueError):
+            ExecutionPolicy(stream_retries=-1)
+        with pytest.raises(ValueError):
+            ExecutionPolicy(stream_backoff_s=-0.1)
+
+
+# ------------------------------------------------------------ work queue
+def _work(src):
+    out = np.zeros(16)
+    for s in np.asarray(src).reshape(-1):
+        out[int(s) % 16] += 0.1 * float(s) + 1.0
+    return out
+
+
+class TestWorkQueue:
+    def make(self, **kw):
+        kw.setdefault("result_template", np.zeros(16))
+        kw.setdefault("clock", ManualClock())
+        kw.setdefault("lease_timeout", 5.0)
+        return WorkQueue(shard_sources(np.arange(23), 5), **kw)
+
+    def test_lease_expiry_reissues(self):
+        q = self.make()
+        l1 = q.lease()
+        assert (l1.tid, l1.attempt) == (0, 1)
+        q._clock.advance(6.0)
+        l2 = q.lease()  # the expired task comes back before task 1
+        assert (l2.tid, l2.attempt) == (0, 2)
+        # the dead worker's late result is a stale token: rejected
+        assert not q.complete(l1, _work(l1.payload))
+        assert not q.completed[0]
+        assert q.complete(l2, _work(l2.payload))
+
+    def test_dead_letter_after_max_attempts(self):
+        q = self.make(max_attempts=2)
+        run_workers(q, _work, deaths=[(0, 1), (0, 2)])
+        assert q.dead_letters == [0]
+        assert q.finished
+        assert q.completed[1:].all()
+
+    def test_merge_is_death_invariant(self):
+        clean = run_workers(self.make(), _work)
+        m0 = clean.merge(lambda a, b: a + b)
+        # worker deaths mid-lease change the merged result by exactly nothing
+        dead = run_workers(self.make(), _work,
+                           deaths=[(1, 1), (3, 1), (3, 2), (4, 1)])
+        m1 = dead.merge(lambda a, b: a + b)
+        assert np.array_equal(m0, m1)
+        assert dead.attempts[3] == 3
+
+    def test_merge_order_is_canonical(self):
+        """Completion order must not leak into the fold (float addition is
+        not associative): complete tasks backwards, merge equal anyway."""
+        fwd = run_workers(self.make(), _work)
+        q = self.make()
+        leases = [q.lease() for _ in range(q.num_tasks)]
+        for l in reversed(leases):
+            assert q.complete(l, _work(l.payload))
+        assert np.array_equal(fwd.merge(lambda a, b: a + b),
+                              q.merge(lambda a, b: a + b))
+
+    def test_checkpoint_resume_mid_sweep(self, tmp_path):
+        full = run_workers(self.make(), _work).merge(lambda a, b: a + b)
+        q = self.make()
+        for _ in range(2):
+            l = q.lease()
+            q.complete(l, _work(l.payload))
+        q.checkpoint(tmp_path)
+        # process dies here; a new queue over the same shards resumes
+        q2 = self.make()
+        assert q2.resume(tmp_path)
+        assert int(q2.completed.sum()) == 2
+        run_workers(q2, _work)
+        assert np.array_equal(full, q2.merge(lambda a, b: a + b))
+
+    def test_resume_rejects_different_sharding(self, tmp_path):
+        q = self.make()
+        l = q.lease()
+        q.complete(l, _work(l.payload))
+        q.checkpoint(tmp_path)
+        other = WorkQueue(shard_sources(np.arange(23), 4),
+                          result_template=np.zeros(16), clock=ManualClock())
+        with pytest.raises(QueueMismatchError):
+            other.resume(tmp_path)
+
+    def test_resume_empty_dir_is_fresh_start(self, tmp_path):
+        assert not self.make().resume(tmp_path / "nothing_here")
+
+    def test_bc_sweep_through_queue(self, host, tmp_path):
+        """End to end: exact-ish BC sharded over the queue; injected
+        worker death changes the merged centrality by exactly nothing."""
+        s = session(host)
+        pol = ExecutionPolicy(backend="scan")
+        shards = shard_sources(np.arange(6), 2)
+        tpl = np.zeros(s.n, np.float32)
+
+        def bc_shard(src):
+            r = s.betweenness(jnp.asarray(src, jnp.int32), policy=pol)
+            return np.asarray(r.values)
+
+        def sweep(deaths):
+            q = WorkQueue(shards, result_template=tpl, clock=ManualClock(),
+                          lease_timeout=5.0)
+            run_workers(q, bc_shard, deaths=deaths,
+                        checkpoint_dir=tmp_path / f"q{len(deaths)}")
+            return q.merge(lambda a, b: a + b)
+
+        clean = sweep([])
+        died = sweep([(0, 1), (2, 1)])
+        assert np.array_equal(clean, died)
+        # and the queue's own checkpoints are restorable
+        q3 = WorkQueue(shards, result_template=tpl, clock=ManualClock())
+        assert q3.resume(tmp_path / "q0")
+        assert q3.finished
+        assert np.array_equal(q3.merge(lambda a, b: a + b), clean)
+
+
+# ------------------------------------------------------------ supervisor
+class TestSupervisor:
+    def test_gives_up_after_max_restarts(self, host, tmp_path):
+        sem, _ = views(host)
+        plan = FailurePlan({k: "crash" for k in range(0, 40)})
+        with pytest.raises(DeviceFailure, match="gave up"):
+            run_supervised(sem, PageRankPullProgram(tol=1e-4),
+                           max_supersteps=25,
+                           checkpoint=CheckpointSpec(tmp_path, every_k=2),
+                           plan=plan, max_restarts=3)
+
+    def test_report_records_resume_points(self, host, tmp_path):
+        sem, _ = views(host)
+        res, rep = run_supervised(
+            sem, PageRankPullProgram(tol=1e-4), max_supersteps=25,
+            checkpoint=CheckpointSpec(tmp_path, every_k=4),
+            plan=FailurePlan({1: "crash", 9: "crash"}))
+        assert rep.restarts == 2
+        assert rep.resumed_steps == [None, 8]  # crash@1 pre-dates any save
+        assert len(rep.log) == 2
+
+
+# ------------------------------------------------------------ telemetry
+class TestTelemetry:
+    def test_sync_odometer(self, host, tmp_path):
+        # The odometer records the checkpoint layer's synchronous seconds
+        # and save count; equality/hash ignore it; child() phases share
+        # (and accumulate into) the same dict.
+        sem, _ = views(host)
+        tele = {}
+        spec = CheckpointSpec(tmp_path / "t", every_k=2, telemetry=tele)
+        run_program(sem, PageRankPullProgram(tol=1e-4),
+                    max_supersteps=10, checkpoint=spec)
+        assert tele["saves"] >= 2
+        assert tele["sync_s"] > 0.0
+        assert spec.child("fwd").telemetry is tele
+        assert spec == CheckpointSpec(tmp_path / "t", every_k=2)
