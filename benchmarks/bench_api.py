@@ -87,10 +87,10 @@ def _direct_bfs(sg, sources, *, policy: ExecutionPolicy):
         sources, jnp.arange(K)].set(0)
 
     def step(s):
-        active = jnp.any(s.frontier, axis=1)
-        unexplored = ~jnp.all(s.reached, axis=1)
-        nxt, st = traverse(sg, s.frontier, active, OR_AND, policy=policy,
-                           unexplored=unexplored)
+        # per-lane masks: traverse unions them across the K axis, exactly
+        # as BFSProgram's frontier does (messages counts per-lane mass).
+        nxt, st = traverse(sg, s.frontier, s.frontier, OR_AND, policy=policy,
+                           unexplored=~s.reached)
         newly = nxt & ~s.reached
         reached = s.reached | newly
         dist = jnp.where(newly, s.level + 1, s.dist)

@@ -21,8 +21,11 @@ wall-clock actually tracks frontier density — the CI guard that the
 blocked path and the compaction layer stay wired into the engine.  It
 also re-runs PageRank under ``residency='host'`` (the true-SEM streamed
 path), gating on bitwise host-vs-device parity, zero device-resident
-edge bytes, and a non-zero measured ``host_bytes`` column.  Finally it
-gates the fault-tolerance layer: a mid-run kill resumed from its newest
+edge bytes, and a non-zero measured ``host_bytes`` column.  It gates
+the batched multi-source driver: the eager façade BFS (which routes
+through it) must be bitwise the unbatched runs and its host-residency
+sweep must amortize link bytes across the batch.  Finally it gates the
+fault-tolerance layer: a mid-run kill resumed from its newest
 checkpoint must be bitwise the uninterrupted run, checkpointing must
 cost <5% wall-clock, and the lease queue's merged sweep must be
 invariant to injected worker deaths.
@@ -52,6 +55,7 @@ BENCHES = [
     "bench_tile_order",
     "bench_kernels",
     "bench_recovery",
+    "bench_multisource",
 ]
 
 # (bench, variant, metric, predicate, paper reference).  Magnitude targets
@@ -143,6 +147,17 @@ CLAIMS = [
     ("recovery", "queue", "death_invariance_ok", lambda v: v == 1.0,
      "Lease queue: the merged multi-source sweep is bitwise-invariant to "
      "injected worker deaths"),
+    ("multisource", "batched", "parity_ok", lambda v: v == 1.0,
+     "Serving: the Q=8 batched run is bitwise-equal to its 8 solo runs "
+     "(values + per-query supersteps, both residencies)"),
+    ("multisource", "host_q8", "bytes_per_query_reduction_x",
+     lambda v: v >= 4.0,
+     "Serving: batched Q=8 BFS moves >=4x fewer host-link bytes per query "
+     "than solo runs (one streamed tile serves the whole batch)"),
+    ("multisource", "device_q8", "records_per_query_reduction_x",
+     lambda v: v > 2.0,
+     "Serving: the chunk ledger shows the same per-query amortization on "
+     "the device-resident path"),
 ]
 
 
@@ -298,6 +313,31 @@ def smoke(json_out: str | None = None) -> int:
         and tsum["rmat"]["hilbert"] <= tsum["rmat"]["dest"]
     )
 
+    # batched multi-source gate: the eager façade bfs routes through the
+    # batched driver — values must be bitwise the jitted (unbatched) runs
+    # above, with the Q stamp and per-query supersteps present; and under
+    # residency='host' the batched sweep must move at most half the
+    # host-link bytes of its solo runs summed (the amortization claim at
+    # smoke scale; the >=4x-at-Q=8 gate runs in bench_multisource).
+    src4 = jnp.asarray([0, 5, 17, 99], jnp.int32)
+    mspol = ExecutionPolicy(backend="scan", switch_fraction=None)
+    ms = session.bfs(src4, policy=mspol)
+    ms_ok = bool((np.asarray(ms.values) == results["bfs_scan"]).all())
+    ms_ok &= int(ms.iostats.queries) == 4 and ms.query_supersteps is not None
+    mssess = repro.Graph(g, chunk_size=256, bd=32, bs=32)
+    hb = mssess.bfs(src4, policy=mspol.with_(residency="host"))
+    ms_ok &= bool((np.asarray(hb.values) == results["bfs_scan"]).all())
+    solo_bytes = sum(
+        int(mssess.bfs(int(s),
+                       policy=mspol.with_(residency="host")).iostats.host_bytes)
+        for s in np.asarray(src4))
+    amort_x = solo_bytes / max(int(hb.iostats.host_bytes), 1)
+    amort_ok = amort_x >= 2.0
+    rows += [
+        row("smoke", "multisource", "parity_ok", 1.0 if ms_ok else 0.0),
+        row("smoke", "multisource", "host_amortization_x", amort_x),
+    ]
+
     # fault-tolerance gate: a PageRank run killed mid-flight and resumed
     # from its newest snapshot must be bitwise the uninterrupted run,
     # snapshots must cost <5% wall-clock (measured at a scale where
@@ -312,7 +352,8 @@ def smoke(json_out: str | None = None) -> int:
 
     print_rows(rows)
     ok = (err < 1e-5 and bfs_ok and dens_ok and dir_ok and facade_ok
-          and order_ok and sem_host_ok and recovery_ok)
+          and order_ok and sem_host_ok and recovery_ok and ms_ok
+          and amort_ok)
     host_col = {r["variant"]: int(r["value"]) for r in rows
                 if r["metric"] == "host_bytes"}
     print(f"# smoke {'PASS' if ok else 'FAIL'} in {time.time() - t0:.1f}s "
@@ -328,7 +369,9 @@ def smoke(json_out: str | None = None) -> int:
           f"kill-resume parity {rsum['parity_ok'] == 1.0}, "
           f"checkpoint sync overhead {100 * rsum['sync_frac']:.2f}% "
           f"[wall ratio {rsum['overhead_x']:.3f}x], "
-          f"queue death invariance {rsum['queue_ok'] == 1.0})")
+          f"queue death invariance {rsum['queue_ok'] == 1.0}, "
+          f"batched multisource parity {ms_ok}, "
+          f"batched host amortization {amort_x:.1f}x)")
     if json_out:
         _write_json(json_out, rows, ok=ok, mode="smoke")
     return 0 if ok else 1

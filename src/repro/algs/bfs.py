@@ -77,12 +77,13 @@ class BFSProgram(VertexProgram):
         return BFSState(reached, reached, dist, jnp.zeros((), jnp.int32))
 
     def frontier(self, sg: SemGraph, s: BFSState) -> Frontier:
-        # Pull candidates: vertices unexplored in at least one lane — the
-        # only rows a BFS step ever reads (newly = nxt & ~reached).
+        # Per-lane active/unexplored masks: the engine unions them across
+        # the K axis before fetching, so one streamed tile still serves all
+        # lanes, while the batched driver sees per-query convergence.
         return Frontier(
             x=s.frontier,
-            active=jnp.any(s.frontier, axis=1),
-            unexplored=~jnp.all(s.reached, axis=1),
+            active=s.frontier,
+            unexplored=~s.reached,
         )
 
     def apply(self, sg: SemGraph, s: BFSState, nxt):

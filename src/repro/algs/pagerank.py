@@ -45,6 +45,7 @@ from ..core.semiring import OR_AND, PLUS_TIMES
 __all__ = [
     "PageRankPullProgram",
     "PageRankPushProgram",
+    "PersonalizedPageRankProgram",
     "pagerank_pull",
     "pagerank_push",
     "pagerank_inmem",
@@ -55,9 +56,16 @@ _PULL_DEFAULT = ExecutionPolicy(switch_fraction=None)
 
 
 def _out_contrib(sg: SemGraph, values: jnp.ndarray) -> jnp.ndarray:
-    """values / out_degree, with dangling vertices contributing nothing."""
+    """values / out_degree, with dangling vertices contributing nothing.
+
+    Broadcasts over any trailing query axis: ``values`` may be ``(n,)`` or
+    ``(n, Q)``; the degree divisor applies per vertex either way.
+    """
     deg = jnp.maximum(sg.out_degree, 1)
-    return jnp.where(sg.out_degree > 0, values / deg, 0.0)
+    shape = deg.shape + (1,) * (values.ndim - 1)
+    return jnp.where(
+        (sg.out_degree > 0).reshape(shape), values / deg.reshape(shape), 0.0
+    )
 
 
 class PRPullState(NamedTuple):
@@ -192,6 +200,80 @@ class PageRankPushProgram(VertexProgram):
         return 100
 
     def finalize(self, sg: SemGraph, s: PRPushState) -> jnp.ndarray:
+        return s.rank
+
+
+class PPRState(NamedTuple):
+    rank: jnp.ndarray  # f32[n, Q]
+    pending: jnp.ndarray  # f32[n, Q] residual not yet propagated
+    active: jnp.ndarray  # bool[n, Q]
+
+
+class PersonalizedPageRankProgram(VertexProgram):
+    """Q-query personalized PageRank (delta push with a query axis).
+
+    Same fixed point as :class:`PageRankPushProgram` with the uniform
+    teleport ``(1-c)/n`` replaced per query by a reset distribution r_q:
+
+        R_q(u) = (1 - c) * r_q(u) + c * sum_{v in B_u} R_q(v) / N_v
+
+    State carries an ``(n, Q)`` rank/pending/active block; the engine
+    unions ``active`` across queries before fetching, so every streamed
+    edge tile is multiplied against the whole ``(tile, Q)`` x-block —
+    one DMA serves all Q queries.  ``seeds`` selects the resets: either
+    ``int32[Q]`` vertex ids (one-hot restart at each source) or a float
+    ``(n, Q)`` matrix of per-query reset distributions (columns are
+    normalized to sum to 1).
+
+    Built for :func:`~repro.core.run_program_batched` (per-query
+    convergence, column retirement) but runs unchanged on the plain
+    driver, where convergence means *all* queries are done.
+    """
+
+    semiring = PLUS_TIMES
+
+    def __init__(self, *, damping: float = 0.85, tol: float = 1e-3):
+        self.damping = damping
+        self.tol = tol
+
+    def prepare_policy(self, sg: SemGraph, policy: ExecutionPolicy):
+        pol = policy.with_(direction="out")
+        if pol.vcap is None:
+            pol = pol.with_(vcap=sg.n)
+        if pol.ecap is None:
+            pol = pol.with_(ecap=max(4096, sg.m // 8))
+        return pol
+
+    def init(self, sg: SemGraph, seeds) -> PPRState:
+        r = jnp.asarray(seeds)
+        if r.ndim == 1 and jnp.issubdtype(r.dtype, jnp.integer):
+            q = r.shape[0]
+            r = jnp.zeros((sg.n, q)).at[r, jnp.arange(q)].set(1.0)
+        else:
+            if r.ndim == 1:
+                r = r[:, None]
+            r = r / jnp.maximum(jnp.sum(r, axis=0, keepdims=True), 1e-30)
+        base = (1.0 - self.damping) * r
+        thresh = self.tol / sg.n
+        return PPRState(base, base, jnp.abs(base) > thresh)
+
+    def frontier(self, sg: SemGraph, s: PPRState) -> Frontier:
+        send = jnp.where(s.active, s.pending, 0.0)
+        return Frontier(x=self.damping * _out_contrib(sg, send),
+                        active=s.active)
+
+    def apply(self, sg: SemGraph, s: PPRState, recv):
+        thresh = self.tol / sg.n
+        send = jnp.where(s.active, s.pending, 0.0)
+        rank = s.rank + recv
+        pending = (s.pending - send) + recv
+        active = jnp.abs(pending) > thresh
+        return PPRState(rank, pending, active), active
+
+    def max_supersteps(self, sg: SemGraph) -> int:
+        return 100
+
+    def finalize(self, sg: SemGraph, s: PPRState) -> jnp.ndarray:
         return s.rank
 
 

@@ -88,6 +88,23 @@ exactly the overlapped case).  ``IOStats.host_bytes`` measures that
 traffic; every other order-invariant field — and the values — are
 bitwise-identical across residencies, which is the refactor's safety net.
 
+**Batched queries (the Q axis).**  ``active`` (and ``unexplored``) may be
+(n, Q) matrices — Q concurrent traversals sharing one edge stream.  The
+engine fetches for the *union* of the per-query frontiers and identity-
+masks each lane's x by its own frontier, so every query combines exactly
+the contributions its solo run would (the union adds only identity terms
+to other lanes).  The cost model gains a Q term: one superstep's fetch
+cost is ``cost(union frontier)`` — between ``max_q cost(frontier_q)`` (at
+full overlap) and ``sum_q cost(frontier_q)`` (disjoint frontiers) — while
+Q sequential sweeps always pay the sum.  Per-query amortized I/O
+(``host_bytes / Q`` under residency='host') therefore drops toward 1/Q as
+frontiers overlap, which is the serving-path headline
+(`benchmarks/bench_multisource.py` sweeps it).  Every dispatch decision
+(Beamer direction, density three-way, pow2 cap buckets) keys on the union
+masses, so a batched superstep executes exactly like a single-query sweep
+of the union frontier; ``messages`` alone stays per-lane-exact (the sum
+over queries of each query's logical edge mass).
+
 Backends
 --------
 The multicast/compact step has four interchangeable executions, selected by
@@ -165,6 +182,7 @@ from .semiring import Semiring
 __all__ = [
     "ExecutionPolicy",
     "as_policy",
+    "batched_union_frontier",
     "beamer_use_pull",
     "bsp_run",
     "hybrid_spmv",
@@ -773,6 +791,43 @@ def _pull_available(sg: SemGraph, pol: ExecutionPolicy) -> bool:
     return True
 
 
+def batched_union_frontier(
+    sg: SemGraph,
+    x: jnp.ndarray,
+    active: jnp.ndarray,
+    sr: Semiring,
+    *,
+    unexplored: Optional[jnp.ndarray],
+    reverse: bool,
+    direction: str,
+):
+    """Collapse an (n, Q) batched frontier into its 1-D union call.
+
+    Returns ``(x_masked, union_active, union_unexplored, lane_mass)``:
+    ``x`` identity-masked per lane (so inactive lanes of a union-fetched
+    row contribute nothing), the column-union activity sets that drive the
+    fetch/dispatch, and the per-lane-summed edge mass that keeps
+    ``IOStats.messages`` equal to the sum of the Q solo runs' logical
+    masses.  Shared by :func:`traverse` and the host streaming executor so
+    both residencies batch identically.
+    """
+    xm = sr.mask_lanes(x, active)
+    union = jnp.any(active, axis=-1)
+    un_union = unexplored
+    if unexplored is not None and unexplored.ndim > 1:
+        un_union = jnp.any(unexplored, axis=-1)
+    # Lane mass counts each query's logical edges on the major side the
+    # 1-D path charges: out-edges everywhere except a plain pull dispatch,
+    # whose activity set is the destination (in-degree) side.
+    plain = reverse or unexplored is None
+    if plain and not reverse and direction == "in":
+        deg = sg.in_degree
+    else:
+        deg = sg.out_degree
+    mass = frontier_edge_mass(deg, active)
+    return xm, union, un_union, mass
+
+
 def traverse(
     sg: SemGraph,
     x: jnp.ndarray,
@@ -815,8 +870,23 @@ def traverse(
     execution-invariant (levels AND messages of a direction-optimized BFS
     are bitwise-equal to static push); requests/records/bytes_moved report
     the I/O the chosen execution actually did.
+
+    Batched queries: ``active`` (and ``unexplored``) may be (n, Q) — Q
+    concurrent traversals amortizing one edge stream.  The engine fetches
+    the union of the per-query frontiers with each lane's x identity-
+    masked by its own frontier (see the module docstring's Q-axis cost
+    model); ``messages`` reports the per-lane sum, everything else the
+    union sweep's actual I/O.
     """
     pol = policy if policy is not None else ExecutionPolicy()
+    if active.ndim > 1:
+        xm, union, un_union, mass = batched_union_frontier(
+            sg, x, active, sr, unexplored=unexplored, reverse=reverse,
+            direction=pol.direction,
+        )
+        y, st = traverse(sg, xm, union, sr, policy=pol,
+                         unexplored=un_union, reverse=reverse, y_init=y_init)
+        return y, st._replace(messages=mass)
     is_host = bool(getattr(sg, "is_host_view", False))
     if pol.residency == "host" or is_host:
         if not is_host:

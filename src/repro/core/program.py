@@ -49,11 +49,13 @@ convergence, and superstep accounting stay in ONE place.
 """
 from __future__ import annotations
 
+import collections
 from typing import Any, NamedTuple, Optional
 import warnings
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .engine import ExecutionPolicy, traverse
 from .sem import IOStats, SemGraph
@@ -64,6 +66,7 @@ __all__ = [
     "ProgramResult",
     "VertexProgram",
     "run_program",
+    "run_program_batched",
     "warn_legacy",
     "legacy_policy",
 ]
@@ -94,12 +97,18 @@ class ProgramResult(NamedTuple):
     state: the full final program state, for programs whose answer has
       side products (e.g. betweenness levels, fused-BC shared fetches);
       ``None`` when the values tell the whole story.
+    query_supersteps: int32[Q] per-query superstep counts, set only by
+      :func:`run_program_batched` — entry q is the superstep at which
+      query column q converged (equal to the supersteps of q's solo run),
+      or the total superstep count when the budget ran out first.  ``None``
+      on unbatched runs.
     """
 
     values: Any
     supersteps: jnp.ndarray
     iostats: IOStats
     state: Any = None
+    query_supersteps: Any = None
 
 
 class VertexProgram:
@@ -166,6 +175,40 @@ class VertexProgram:
         PR-pull overrides this with its out-edge activation broadcast.
         """
         return state, None
+
+    # ---- batched-query hooks (run_program_batched only) -----------------
+    def converged_cols(self, sg: SemGraph, state: State,
+                       activated) -> jnp.ndarray:
+        """bool[Q]: which query columns have converged this superstep.
+
+        The per-column refinement of ``converged`` used by
+        :func:`run_program_batched`.  The default mirrors ``converged``'s
+        "nothing activated" test column-wise over an (n, Q) ``activated``
+        — correct for any program whose convergence means its frontier
+        drained (a converged column then stays converged and contributes
+        identity forever, which is what makes early retirement safe).
+        """
+        return ~jnp.any(activated, axis=0)
+
+    def take_cols(self, state: State, cols, width: int) -> State:
+        """Slice query columns ``cols`` out of an (n, ``width``)-batched
+        state — how :func:`run_program_batched` retires converged columns
+        (compacting the live ones) and captures finished ones.
+
+        The default slices every array leaf whose trailing dimension is
+        ``width`` and passes everything else (per-run scalars, O(n)
+        vectors) through unchanged.  Programs whose state has a leaf that
+        coincidentally ends in a ``width``-sized non-query axis must
+        override this.
+        """
+        cols = jnp.asarray(cols, jnp.int32)
+
+        def leaf(a):
+            if getattr(a, "ndim", 0) >= 1 and a.shape[-1] == width:
+                return a[..., cols]
+            return a
+
+        return jax.tree_util.tree_map(leaf, state)
 
     def prepare_policy(self, sg: SemGraph,
                        policy: ExecutionPolicy) -> ExecutionPolicy:
@@ -287,6 +330,280 @@ def run_program(
         cond, body, (state0, IOStats.zero(), jnp.zeros((), jnp.int32), done0)
     )
     return ProgramResult(prog.finalize(sg, state), iters, io, state)
+
+
+# --------------------------------------------------------------------------
+# the batched multi-source driver
+# --------------------------------------------------------------------------
+_BATCH_CACHE: "collections.OrderedDict" = collections.OrderedDict()
+_BATCH_CACHE_SIZE = 8
+
+
+def _batched_step_fn(sg, prog: VertexProgram, pol: ExecutionPolicy):
+    """The device batched superstep, wrapped by
+    :func:`repro.core.residency._loopify` so it compiles in the same
+    while-loop-body codegen context as the sequential drivers (bitwise
+    parity; see ``_loopify``).  Cached across runs like
+    ``recovery._SEG_CACHE`` — the cached closure holds ``sg`` strongly, so
+    the ``id(sg)`` key cannot be recycled while cached."""
+    from .residency import _loopify
+
+    def build():
+        def body(state, io):
+            fr = prog.frontier(sg, state)
+            gathered, st = prog.gather(sg, state, fr, pol)
+            state2, activated = prog.apply(sg, state, gathered)
+            state2, st_act = prog.activate(sg, state2, pol)
+            io = io + st
+            if st_act is not None:
+                io = io + st_act
+            io = io._replace(supersteps=io.supersteps + 1)
+            conv = prog.converged_cols(sg, state2, activated)
+            return state2, io, conv
+
+        return _loopify(body)
+
+    try:
+        key = (id(sg), type(prog), tuple(sorted(prog.__dict__.items())), pol)
+    except TypeError:  # unhashable program config: run uncached
+        return build()
+    hit = _BATCH_CACHE.get(key)
+    if hit is None:
+        hit = _BATCH_CACHE[key] = build()
+        while len(_BATCH_CACHE) > _BATCH_CACHE_SIZE:
+            _BATCH_CACHE.popitem(last=False)
+    else:
+        _BATCH_CACHE.move_to_end(key)
+    return hit
+
+
+def _pow2_at_least(k: int) -> int:
+    g = 1
+    while g < max(1, k):
+        g *= 2
+    return g
+
+
+def _reassemble_values(parts, Q: int):
+    """Stitch per-part finalized values (each with a trailing column axis)
+    back into original column order.  ``parts`` is a list of
+    ``(orig_cols, values)``; leaves whose trailing dim is not the part's
+    column count (per-run scalars) take the last part's value."""
+    order = np.concatenate([np.asarray(c, np.int64) for c, _ in parts])
+    perm = jnp.asarray(np.argsort(order), jnp.int32)
+    widths = [len(c) for c, _ in parts]
+
+    def cat(*leaves):
+        if all(getattr(a, "ndim", 0) >= 1 and a.shape[-1] == w
+               for a, w in zip(leaves, widths)):
+            return jnp.concatenate(leaves, axis=-1)[..., perm]
+        return leaves[-1]
+
+    return jax.tree_util.tree_map(cat, *(v for _, v in parts))
+
+
+def run_program_batched(
+    sg: SemGraph,
+    prog: VertexProgram,
+    policy: Optional[ExecutionPolicy] = None,
+    *,
+    seeds=None,
+    max_supersteps: Optional[int] = None,
+    checkpoint=None,
+    resume: bool = False,
+    _plan=None,
+) -> ProgramResult:
+    """The Q-query BSP driver: one superstep loop serving Q concurrent
+    query columns, each streamed edge tile amortized across all of them.
+
+    Runs a program whose state/frontier carry a trailing query axis
+    (``frontier().active`` must be (n, Q)) through the same superstep body
+    as :func:`run_program`, with three additions:
+
+      * **per-query convergence** — ``prog.converged_cols`` yields a
+        bool[Q] mask per superstep; ``ProgramResult.query_supersteps[q]``
+        records the superstep at which column q converged, which equals
+        the supersteps of q's solo run (a batched column's frontier
+        evolves exactly as its solo frontier — the union fetch only adds
+        identity contributions from other lanes).
+      * **early retirement** — converged columns are retired by compacting
+        the live columns into pow2 Q-buckets (``prog.take_cols``), so the
+        per-superstep state cost tracks the LIVE query count and the step
+        function is traced at most ``log2(Q) + 1`` times, never per
+        retirement.  Retired columns' values are captured at retirement
+        and stitched back into original column order at exit.  With
+        ``checkpoint=`` set, retirement is disabled (snapshots need a
+        fixed schema) — the run stays at width Q and converged columns
+        ride along inactive, which costs state memory but no extra I/O
+        (an empty frontier adds nothing to the union).
+      * **amortization accounting** — ``IOStats.queries`` is stamped to Q
+        at exit, so ``iostats.host_bytes / queries`` (etc.) is the
+        measured per-query cost the batching exists to shrink.
+
+    The loop is eager (retirement decisions need concrete convergence
+    masks); like the host driver it cannot sit under ``jax.jit``.  Both
+    residencies are supported — under ``residency='host'`` the streamed
+    work-list is the column-union of live frontiers, which is where the
+    host-link amortization is realized.
+
+    ``ProgramResult.state`` is the final full-width state when no column
+    was retired mid-run, ``None`` otherwise (values are reassembled from
+    per-part ``finalize`` calls).
+    """
+    try:
+        if not jax.core.trace_state_clean():
+            raise ValueError(
+                "run_program_batched cannot run under jit: column "
+                "retirement and per-query bookkeeping need concrete "
+                "convergence masks each superstep"
+            )
+    except AttributeError:
+        pass
+    pol = policy if policy is not None else prog.default_policy
+    pol = pol if pol is not None else ExecutionPolicy()
+    is_host = pol.residency == "host" or getattr(sg, "is_host_view", False)
+    if is_host:
+        if not getattr(sg, "is_host_view", False):
+            raise ValueError(
+                "residency='host' policy met a device-resident graph; run "
+                "through repro.Graph or build a host view with "
+                "repro.core.residency.host_graph()"
+            )
+        if pol.residency != "host":
+            raise ValueError(
+                "device-residency policy met a host-resident graph view; "
+                "use ExecutionPolicy(residency='host') or build a device "
+                "view with device_graph()"
+            )
+    pol = prog.prepare_policy(sg, pol)
+    state = prog.init(sg, seeds)
+    fr0 = prog.frontier(sg, state)
+    if fr0.active.ndim != 2:
+        raise ValueError(
+            "run_program_batched needs an (n, Q)-batched program: "
+            f"frontier().active has shape {fr0.active.shape}"
+        )
+    Q = int(fr0.active.shape[-1])
+    budget = int(max_supersteps if max_supersteps is not None
+                 else prog.max_supersteps(sg))
+
+    ctx = None
+    if checkpoint is not None:
+        from .recovery import _CheckpointCtx, run_fingerprint
+
+        ctx = _CheckpointCtx(checkpoint,
+                             run_fingerprint(sg, prog, pol, seeds))
+    from .recovery import maybe_fail
+
+    def _wrap(state, done_at):
+        return {"done_at": jnp.asarray(done_at, jnp.int32), "state": state}
+
+    if is_host:
+        frontier_fn, apply_fn = sg._hooks(prog, pol)
+
+        def step(state, io):
+            fr = frontier_fn(state)
+            gathered, st = prog.gather(sg, state, fr, pol)
+            state, activated = apply_fn(state, gathered)
+            state, st_act = prog.activate(sg, state, pol)
+            io = io + st
+            if st_act is not None:
+                io = io + st_act
+            io = io._replace(supersteps=io.supersteps + 1)
+            conv = prog.converged_cols(sg, state, activated)
+            return state, io, conv
+
+        def union_active(state):
+            a = frontier_fn(state).active
+            return jnp.any(a, axis=-1) if a.ndim > 1 else a
+    else:
+        step = _batched_step_fn(sg, prog, pol)
+
+        def union_active(state):
+            a = prog.frontier(sg, state).active
+            return jnp.any(a, axis=-1) if a.ndim > 1 else a
+
+    done_at = np.full(Q, -1, np.int64)
+    io = IOStats.zero()
+    it = 0
+    done = (bool(prog.converged(sg, state, None))
+            if prog.check_initial_convergence else False)
+    if done:
+        done_at[:] = 0
+    if resume and ctx is not None:
+        hit = ctx.try_restore(sg, _wrap(state, done_at))
+        if hit is not None:
+            wrapped, io, it, finished = hit
+            state = wrapped["state"]
+            done_at = np.asarray(wrapped["done_at"], np.int64)
+            if finished:
+                return ProgramResult(
+                    prog.finalize(sg, state), jnp.asarray(it, jnp.int32),
+                    io._replace(queries=jnp.asarray(Q, jnp.int32)), state,
+                    jnp.asarray(done_at, jnp.int32))
+            done = False  # an unfinished snapshot is mid-loop by definition
+
+    retire = ctx is None  # snapshots need a fixed (n, Q) schema
+    cur = list(range(Q))  # original column at each live position
+    width = Q  # current (pow2-padded) column count of `state`
+    parts = []  # (orig cols, finalized values) captured at retirement
+
+    try:
+        while not done and it < budget:
+            maybe_fail(_plan, it)
+            state, io, conv = step(state, io)
+            it += 1
+            conv_np = np.asarray(conv)
+            for i, q in enumerate(cur):
+                if conv_np[i] and done_at[q] < 0:
+                    done_at[q] = it
+            live = [i for i, q in enumerate(cur) if done_at[q] < 0]
+            done = not live
+            if retire and not done:
+                g = _pow2_at_least(len(live))
+                if g < width:
+                    dropped = [i for i, q in enumerate(cur)
+                               if done_at[q] >= 0]
+                    parts.append((
+                        [cur[i] for i in dropped],
+                        prog.finalize(
+                            sg, prog.take_cols(state, dropped, width)),
+                    ))
+                    # Pad to the pow2 bucket with a converged column: it is
+                    # inactive forever, so it adds no frontier mass and no
+                    # fetches — only slots.
+                    cols = live + [dropped[0]] * (g - len(live))
+                    state = prog.take_cols(state, cols, width)
+                    cur = [cur[i] for i in live]
+                    width = g
+            finished = done or it >= budget
+            if finished:
+                done_at[done_at < 0] = it  # budget-exhausted columns
+            if ctx is not None and ctx.due(it, finished):
+                ctx.save(it, finished, _wrap(state, done_at), io,
+                         union_active(state))
+    except BaseException:
+        if ctx is not None:
+            ctx.wait()  # drain any in-flight async save before unwinding
+        raise
+    done_at[done_at < 0] = it  # zero-superstep exits
+    if ctx is not None:
+        if it == 0:
+            ctx.save(0, True, _wrap(state, done_at), io,
+                     jnp.zeros(sg.n, bool))
+        ctx.wait()
+
+    io = io._replace(queries=jnp.asarray(Q, jnp.int32))
+    if parts:
+        parts.append((cur, prog.finalize(
+            sg, prog.take_cols(state, list(range(len(cur))), width))))
+        values = _reassemble_values(parts, Q)
+        final_state = None
+    else:
+        values = prog.finalize(sg, state)
+        final_state = state
+    return ProgramResult(values, jnp.asarray(it, jnp.int32), io, final_state,
+                         jnp.asarray(done_at, jnp.int32))
 
 
 # --------------------------------------------------------------------------

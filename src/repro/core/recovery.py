@@ -417,8 +417,10 @@ def run_program_checkpointed(
             it, done = int(it_a), bool(done_a)
             finished = done or it >= budget
             if ctx is not None and ctx.due(it, finished):
-                fr = prog.frontier(sg, state)
-                ctx.save(it, finished, state, io, fr.active)
+                act = prog.frontier(sg, state).active
+                if act.ndim > 1:  # batched lanes: snapshot the 1-D union
+                    act = jnp.any(act, axis=-1)
+                ctx.save(it, finished, state, io, act)
     except BaseException:
         if ctx is not None:
             ctx.wait()  # drain any in-flight async save before unwinding

@@ -76,6 +76,7 @@ from .engine import (
     _blocked_post,
     _blocked_pre_mask,
     _check_blocked_semiring,
+    batched_union_frontier,
     beamer_use_pull,
 )
 from .sem import (
@@ -929,6 +930,20 @@ def host_traverse(
             "host BSP driver keeps the loop eager and jits the per-step "
             "hooks instead)"
         )
+    if active.ndim > 1:
+        # Batched query lanes: stream the union of the per-query frontiers
+        # once (this is where the host-link amortization is realized — one
+        # double-buffered tile/chunk upload serves all Q live queries),
+        # with each lane's x identity-masked by its own frontier.  Shares
+        # the engine's helper so both residencies batch identically.
+        xm, union, un_union, mass = batched_union_frontier(
+            hg, x, active, sr, unexplored=unexplored, reverse=reverse,
+            direction=pol.direction,
+        )
+        y, st = host_traverse(hg, xm, union, sr, policy=pol,
+                              unexplored=un_union, reverse=reverse,
+                              y_init=y_init)
+        return y, st._replace(messages=mass)
     if reverse or unexplored is None:
         direction = pol.direction if pol.direction in ("out", "in") else "out"
         return _host_dispatch(hg, x, active, sr, direction=direction,
@@ -1064,7 +1079,10 @@ def run_program_host(
             done = bool(prog.converged(sg, state, activated))
             finished = done or it >= budget
             if ctx is not None and ctx.due(it, finished):
-                ctx.save(it, finished, state, io, frontier_fn(state).active)
+                act = frontier_fn(state).active
+                if act.ndim > 1:  # batched lanes: snapshot the 1-D union
+                    act = jnp.any(act, axis=-1)
+                ctx.save(it, finished, state, io, act)
     except BaseException:
         if ctx is not None:
             ctx.wait()  # drain any in-flight async save before unwinding

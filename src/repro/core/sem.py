@@ -104,6 +104,13 @@ class IOStats(NamedTuple):
       host run, so like ``host_bytes`` it is excluded from cross-residency
       parity checks (a retried batch re-ships the same bytes and produces
       the same values; only this odometer moves).
+    queries: number of concurrent query columns (Q) the run's traversals
+      were amortized across — stamped once at exit by the batched
+      multi-source driver (:func:`repro.core.run_program_batched`), 0 on
+      every unbatched run.  Not an accumulating counter: divide any other
+      field by ``max(queries, 1)`` for the per-query amortized cost (e.g.
+      ``host_bytes / queries`` is the host-link bytes each query paid —
+      the number `benchmarks/bench_multisource.py` sweeps against Q).
 
     All counters are int32 (JAX's default integer without x64), so each
     wraps at 2^31 of its unit — ~2 GiB for ``bytes_moved``, ~2.1e9 edge
@@ -121,11 +128,12 @@ class IOStats(NamedTuple):
     x_fetches: jnp.ndarray
     host_bytes: jnp.ndarray
     retries: jnp.ndarray = 0
+    queries: jnp.ndarray = 0
 
     @staticmethod
     def zero() -> "IOStats":
         z = jnp.zeros((), dtype=jnp.int32)
-        return IOStats(z, z, z, z, z, z, z, z, z)
+        return IOStats(z, z, z, z, z, z, z, z, z, z)
 
     def __add__(self, other: "IOStats") -> "IOStats":  # type: ignore[override]
         return IOStats(*(a + b for a, b in zip(self, other)))
@@ -372,8 +380,13 @@ def frontier_edge_mass(degree: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
     The quantity both switch heuristics key on — Beamer's push/pull flip
     compares the frontier's out-edge mass against the unexplored mass, and
     the p2p switch compares it against ``switch_fraction * m``.
+
+    ``active`` may carry trailing query lanes (bool[n, Q]): the mass is
+    then summed over every live (vertex, lane) pair, i.e. the total edge
+    contributions a batched superstep combines across all Q queries.
     """
-    return jnp.sum(jnp.where(active, degree, 0)).astype(jnp.int32)
+    deg = degree.reshape(degree.shape + (1,) * (active.ndim - degree.ndim))
+    return jnp.sum(jnp.where(active, deg, 0)).astype(jnp.int32)
 
 
 def pow2_buckets(cap: int) -> tuple:

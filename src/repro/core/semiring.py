@@ -70,6 +70,17 @@ class Semiring:
         shape = (n_rows,) + x.shape[1:]
         return jnp.full(shape, self.identity, dtype=x.dtype)
 
+    def mask_lanes(self, x: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
+        """Identity-mask ``x`` per (vertex, lane).
+
+        The batched multi-source path fetches edges for the *union* of the
+        per-query frontiers; slots whose own lane is inactive must still
+        contribute the ``combine`` identity so each query's result is
+        exactly what its solo run would produce.  ``active`` broadcasts
+        against ``x`` (bool[n, Q] against value[n, Q]).
+        """
+        return jnp.where(active, x, jnp.asarray(self.identity, x.dtype))
+
 
 def _times(xv, w):
     return xv if w is None else xv * w

@@ -284,14 +284,30 @@ class WorkQueue:
         return True
 
 
-def shard_sources(sources, shard_size: int) -> list:
-    """Split a source vertex set into queue task payloads of at most
-    ``shard_size`` sources each (the work unit of a sweep: one BSP run
-    per shard)."""
+def shard_sources(sources, shard_size: Optional[int] = None, *,
+                  batch: Optional[int] = None) -> list:
+    """Split a source vertex set into queue task payloads.
+
+    ``shard_size=S``: payloads of at most S sources each, the classic
+    work unit — one BSP run per source inside the shard.
+
+    ``batch=Q``: payloads are Q-source *groups* meant to run as ONE
+    batched multi-source pass each (``run_program_batched`` /
+    ``Graph.bfs(sources=group)``), so a lease amortizes every streamed
+    edge chunk across its whole group.  The slicing is canonical either
+    way (contiguous, in source order), so the queue's task-id merge fold
+    stays order- and death-invariant over batched results: a group's
+    result commits under one tid exactly like a shard's.
+
+    Exactly one of ``shard_size`` / ``batch`` must be given.
+    """
     src = np.asarray(sources).reshape(-1)
-    if shard_size < 1:
-        raise ValueError("shard_size must be >= 1")
-    return [src[i:i + shard_size] for i in range(0, len(src), shard_size)]
+    if (shard_size is None) == (batch is None):
+        raise ValueError("pass exactly one of shard_size= or batch=")
+    size = int(shard_size if shard_size is not None else batch)
+    if size < 1:
+        raise ValueError("shard_size/batch must be >= 1")
+    return [src[i:i + size] for i in range(0, len(src), size)]
 
 
 def run_workers(

@@ -32,7 +32,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import ExecutionPolicy, IOStats, ProgramResult, SemGraph, run_program
+from ..core import (
+    ExecutionPolicy,
+    IOStats,
+    ProgramResult,
+    SemGraph,
+    run_program,
+    run_program_batched,
+)
 from ..core.program import VertexProgram
 from ..core.sem import _store_record_bytes, device_graph
 from ..core.semiring import PLUS_TIMES
@@ -44,13 +51,25 @@ from ..algs.bfs import BFSProgram
 from ..algs.coreness import CorenessProgram
 from ..algs.diameter import _diameter
 from ..algs.louvain import louvain as _louvain
-from ..algs.pagerank import PageRankPullProgram, PageRankPushProgram
+from ..algs.pagerank import (
+    PageRankPullProgram,
+    PageRankPushProgram,
+    PersonalizedPageRankProgram,
+)
 from ..algs.triangles import TriangleResult, count_triangles
 from . import csr
 
 __all__ = ["Graph"]
 
 _BLOCKED = ("blocked", "blocked_compact")
+
+
+def _eager() -> bool:
+    """True outside any jit trace (the batched driver is eager-only)."""
+    try:
+        return jax.core.trace_state_clean()
+    except AttributeError:  # pragma: no cover - older/newer jax layouts
+        return True
 
 
 def _i32(value) -> jnp.ndarray:
@@ -241,7 +260,8 @@ class Graph:
                                          bd=self._bd, bs=self._bs)
         return self._host_view
 
-    def memory_report(self, policy: Optional[ExecutionPolicy] = None) -> dict:
+    def memory_report(self, policy: Optional[ExecutionPolicy] = None, *,
+                      batch: int = 1) -> dict:
         """Where this session's graph bytes live right now.
 
         Returns a dict with
@@ -267,7 +287,14 @@ class Graph:
             demands it), so a run longer than ``stream_buffer`` tiles
             becomes an oversized batch — runs are at most
             ``ceil(n / bs)`` tiles, so the bound is unconditional once
-            ``stream_buffer`` reaches that.
+            ``stream_buffer`` reaches that;
+          * ``query_state_bytes`` — the O(n·Q) vertex-state term for a
+            ``batch=Q`` multi-source run (model: per vertex-query lane
+            one bool frontier mask, one bool membership mask, and one
+            4-byte value column — the BFS/PPR shape).  This is the axis
+            the batched driver grows: edge bytes are amortized over Q
+            but state is Q× a single query's, so Q is bounded by vertex
+            memory, not edge bandwidth.
         """
         pol = policy if policy is not None else ExecutionPolicy()
 
@@ -332,6 +359,7 @@ class Graph:
             "host_store_bytes": hv.store_nbytes if hv is not None else 0,
             "peak_stage_bytes": hv.peak_stage_bytes if hv is not None else 0,
             "stream_buffer_bytes": int(stream_buffer_bytes),
+            "query_state_bytes": int(self.n) * max(int(batch), 1) * 6,
         }
 
     def _sem(self, policy: Optional[ExecutionPolicy], prog=None, *,
@@ -365,6 +393,7 @@ class Graph:
         program: VertexProgram,
         *,
         seeds=None,
+        batch: Optional[int] = None,
         policy: Optional[ExecutionPolicy] = None,
         max_supersteps: Optional[int] = None,
         checkpoint=None,
@@ -376,6 +405,13 @@ class Graph:
         and the same cached views — as the built-in algorithms.  See
         ``examples/custom_program.py`` for a complete ~30-line program.
 
+        ``batch=Q`` opts into the batched multi-source driver
+        (:func:`~repro.core.run_program_batched`): the program must carry
+        an ``(n, Q)`` frontier; the result gains per-query
+        ``query_supersteps`` and ``iostats.queries == Q``, and converged
+        query columns are retired mid-run.  ``Q`` must match the
+        frontier's trailing axis.
+
         ``checkpoint=CheckpointSpec(dir)`` makes the run fault-tolerant
         (superstep snapshots; ``resume=True`` continues a killed run,
         bitwise-equal to an uninterrupted one) — see
@@ -383,6 +419,17 @@ class Graph:
         """
         pol = policy if policy is not None else program.default_policy
         sem = self._sem(pol, program)
+        if batch is not None:
+            res = run_program_batched(sem, program, policy, seeds=seeds,
+                                      max_supersteps=max_supersteps,
+                                      checkpoint=checkpoint, resume=resume)
+            q = int(res.iostats.queries)
+            if int(batch) != q:
+                raise ValueError(
+                    f"batch={batch} does not match the program's query "
+                    f"axis (frontier carries Q={q} columns)"
+                )
+            return res
         return run_program(sem, program, policy, seeds=seeds,
                            max_supersteps=max_supersteps,
                            checkpoint=checkpoint, resume=resume)
@@ -403,13 +450,21 @@ class Graph:
 
         ``direction='auto'`` policies get Beamer push↔pull switching;
         blocked backends stream all K lanes through one tile fetch.
+
+        Multi-source calls run on the batched multi-source driver: the
+        result additionally carries ``query_supersteps`` (int32[K] — the
+        superstep each source's search converged at, equal to its solo
+        run's superstep count) and ``iostats.queries == K``, so any other
+        IOStats field divided by ``K`` is the per-query amortized cost.
+        Values are bitwise-identical to K independent runs either way.
         """
         scalar = jnp.ndim(sources) == 0
         seeds = jnp.atleast_1d(jnp.asarray(sources, jnp.int32))
         prog = BFSProgram()
-        res = run_program(self._sem(policy, prog), prog, policy, seeds=seeds,
-                          max_supersteps=max_supersteps,
-                          checkpoint=checkpoint, resume=resume)
+        driver = run_program if (scalar or not _eager()) else run_program_batched
+        res = driver(self._sem(policy, prog), prog, policy, seeds=seeds,
+                     max_supersteps=max_supersteps,
+                     checkpoint=checkpoint, resume=resume)
         return res._replace(values=res.values[:, 0] if scalar else res.values)
 
     def pagerank(
@@ -419,6 +474,7 @@ class Graph:
         damping: float = 0.85,
         tol: float = 1e-3,
         max_iters: int = 100,
+        reset=None,
         policy: Optional[ExecutionPolicy] = None,
         checkpoint=None,
         resume: bool = False,
@@ -428,9 +484,31 @@ class Graph:
         ``mode='push'`` is Graphyti's delta-push (P1: I/O shrinks as ranks
         converge); ``'pull'`` the Pregel-style baseline it is measured
         against (§4.1, Fig. 2).
+
+        ``reset`` switches to *personalized* PageRank and batches Q
+        queries through one engine pass: pass ``int32[Q]`` restart
+        vertices (one-hot resets) or a float ``(n, Q)`` matrix of
+        per-query reset distributions.  ``values`` becomes ``f32[n, Q]``
+        (column q solves query q's fixed point, bitwise-equal to running
+        it alone), the result carries ``query_supersteps``, and
+        ``iostats.queries == Q``.  Push-only: raise on ``mode='pull'``.
         """
         if mode not in ("push", "pull"):
             raise ValueError(f"unknown pagerank mode {mode!r}")
+        if reset is not None:
+            if mode != "push":
+                raise ValueError(
+                    "personalized pagerank (reset=...) is delta-push only; "
+                    "drop mode='pull'"
+                )
+            prog = PersonalizedPageRankProgram(damping=damping, tol=tol)
+            seeds = jnp.asarray(reset)
+            if seeds.ndim == 0:
+                seeds = seeds[None]
+            driver = run_program_batched if _eager() else run_program
+            return driver(self._sem(policy, prog), prog, policy, seeds=seeds,
+                          max_supersteps=max_iters,
+                          checkpoint=checkpoint, resume=resume)
         prog = (PageRankPushProgram if mode == "push" else PageRankPullProgram)(
             damping=damping, tol=tol
         )
@@ -458,6 +536,7 @@ class Graph:
         sources=None,
         *,
         mode: str = "multi",
+        batch: Optional[int] = None,
         policy: Optional[ExecutionPolicy] = None,
         max_supersteps: Optional[int] = None,
         checkpoint=None,
@@ -473,9 +552,20 @@ class Graph:
         independent runs, the Fig. 6 baseline), or 'fused' (per-source
         phase fusion; ``state.shared`` counts fwd/bwd fetches served by
         one chunk read).  'fused' is a fixed scan-store execution and
-        rejects a ``policy``."""
+        rejects a ``policy``.
+
+        ``batch=Q`` (uni mode only) groups the per-source sweep into
+        ceil(K/Q) batched forward/backward passes — every streamed edge
+        chunk serves Q sources' sweeps at once, values bitwise-equal to
+        the one-source-at-a-time loop; ``iostats.queries`` is stamped K
+        so amortized per-query I/O reads off directly."""
         if mode not in ("multi", "uni", "fused"):
             raise ValueError(f"unknown betweenness mode {mode!r}")
+        if batch is not None and mode != "uni":
+            raise ValueError(
+                "betweenness(batch=...) amortizes the per-source uni-mode "
+                "sweep; mode='multi' already runs all sources in one pass"
+            )
         if sources is None:
             raise ValueError(
                 "betweenness() needs explicit sources; pass "
@@ -501,16 +591,19 @@ class Graph:
             bc = jnp.zeros(self.n)
             io = IOStats.zero()
             steps = jnp.zeros((), jnp.int32)
-            for i in range(sources.shape[0]):
-                # per-source checkpoint subtree: a kill mid-sweep resumes
-                # at the interrupted source, finished sources replay from
+            group = 1 if batch is None else max(int(batch), 1)
+            for i in range(0, sources.shape[0], group):
+                # per-group checkpoint subtree: a kill mid-sweep resumes
+                # at the interrupted group, finished groups replay from
                 # their final snapshots.
                 ck = checkpoint.child(f"src_{i:05d}") \
                     if checkpoint is not None else None
-                b, st, it = _bc_sync(sem, sources[i : i + 1],
+                b, st, it = _bc_sync(sem, sources[i : i + group],
                                      max_supersteps, policy,
                                      checkpoint=ck, resume=resume)
                 bc, io, steps = bc + b, io + st, steps + it
+            if batch is not None:
+                io = io._replace(queries=_i32(sources.shape[0]))
             return ProgramResult(bc, steps, io)
         bc, io, steps = _bc_sync(sem, sources, max_supersteps, policy,
                                  checkpoint=checkpoint, resume=resume)
