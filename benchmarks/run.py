@@ -67,6 +67,9 @@ CLAIMS = [
      "Graph facade adds <2% overhead over direct traverse() loops"),
     ("api", "facade", "parity_ok", lambda v: v == 1.0,
      "Graph facade is bitwise-equal (values+IOStats) to direct loops"),
+    ("api", "analyze", "analyzed_over_plain_x", lambda v: v < 1.05,
+     "analyze=True pre-flight is a one-time trace: warmed analyzed runs "
+     "within 5% of plain runs (analysis cached, zero per-superstep cost)"),
     ("pagerank", "push_over_pull", "read_reduction_x", lambda v: v > 1.2,
      "Fig.2: push reads less than pull (paper: 1.8x)"),
     ("pagerank", "push_over_pull", "request_reduction_x", lambda v: v > 1.3,

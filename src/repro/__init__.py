@@ -20,6 +20,8 @@ power users.
 from .core import (
     CheckpointSpec,
     ExecutionPolicy,
+    PolicyError,
+    ResidencyError,
     FailurePlan,
     Frontier,
     IOStats,
@@ -38,7 +40,9 @@ __all__ = [
     "Frontier",
     "Graph",
     "IOStats",
+    "PolicyError",
     "ProgramResult",
+    "ResidencyError",
     "VertexProgram",
     "WorkQueue",
     "run_program",

@@ -101,7 +101,7 @@ class PageRankPullProgram(VertexProgram):
     def init(self, sg: SemGraph, seeds) -> PRPullState:
         n = sg.n
         return PRPullState(
-            rank=jnp.full(n, 1.0 / n),
+            rank=jnp.full(n, 1.0 / n, jnp.float32),
             prev=jnp.zeros(n),
             active=jnp.ones(n, bool),
             changed=jnp.zeros(n, bool),
@@ -178,8 +178,8 @@ class PageRankPushProgram(VertexProgram):
     def init(self, sg: SemGraph, seeds) -> PRPushState:
         base = (1.0 - self.damping) / sg.n
         return PRPushState(
-            rank=jnp.full(sg.n, base),  # teleport mass, applied
-            pending=jnp.full(sg.n, base),  # ... and pending propagation of it
+            rank=jnp.full(sg.n, base, jnp.float32),  # teleport mass, applied
+            pending=jnp.full(sg.n, base, jnp.float32),  # ... and pending propagation of it
             active=jnp.ones(sg.n, bool),
         )
 

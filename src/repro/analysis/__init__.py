@@ -1,0 +1,48 @@
+"""``repro.analysis`` — the jaxpr-level SEM contract checker ("semlint").
+
+Graphyti's SEM guarantees — O(n) vertex state on device, O(m) edge data
+streamed, no hidden synchronization, order-invariant I/O accounting —
+were enforced only *dynamically* before this package: parity tests and
+``ValueError`` s raised deep inside ``traverse()``.  ``analyze()`` checks
+them *statically*, on the jaxpr of the exact superstep body the driver
+runs, before any edge byte moves::
+
+    import repro
+    from repro import analysis
+
+    g = repro.Graph.from_edges(...)
+    report = analysis.check(g, MyProgram(), policy, seeds=0)
+    print(report.render())          # rule table, file:line diagnostics
+    report.raise_if_errors()        # or: g.run(MyProgram(), analyze=True)
+
+Six rules ship (see :mod:`repro.analysis.rules` for full semantics):
+R1 residency, R2 host-sync, R3 retrace audit, R4 IOStats
+order-invariance, R5 semiring lawfulness, R6 convergence guard.  The
+source-level AST companion lives in ``tools/semlint.py``; CI runs both
+(the AST lint over ``src/``, the analyzer as a zero-findings gate over
+every built-in program and example).
+"""
+from .report import RULES, AnalysisError, AnalysisReport, Finding
+from .rules import analyze
+
+__all__ = [
+    "RULES",
+    "AnalysisError",
+    "AnalysisReport",
+    "Finding",
+    "analyze",
+    "check",
+]
+
+
+def check(graph, program, policy=None, *, seeds=None,
+          raise_on_error: bool = False) -> AnalysisReport:
+    """Convenience wrapper: ``analyze()`` with the session-façade argument
+    order (graph first, like ``Graph.run``).  With ``raise_on_error``
+    the report raises :class:`AnalysisError` when any error-severity
+    finding exists — this is exactly what ``Graph.run(analyze=True)``
+    calls before dispatching the run."""
+    report = analyze(program, graph, policy, seeds=seeds)
+    if raise_on_error:
+        report.raise_if_errors()
+    return report

@@ -15,6 +15,13 @@ The engine mirrors FlashGraph's execution model:
     reduction over all m edges, no skipping, no counting.  This is what the
     "SEM achieves 80% of in-memory performance" claim is measured against.
 
+Every runtime guard in this module raises a typed error —
+:class:`PolicyError` for a bad knob, :class:`ResidencyError` for a
+missing view — and each has a *static* counterpart in
+:mod:`repro.analysis` (jaxpr rules R1–R6) and ``tools/semlint.py``
+(AST rules S1–S3): what the dispatch would reject mid-run,
+``Graph.run(analyze=True)`` rejects before any edge byte moves.
+
 Algorithms do not normally call this module directly: they are
 :class:`~repro.core.program.VertexProgram` instances, and
 :func:`~repro.core.program.run_program` — the library's single BSP driver —
@@ -181,6 +188,8 @@ from .semiring import Semiring
 
 __all__ = [
     "ExecutionPolicy",
+    "PolicyError",
+    "ResidencyError",
     "as_policy",
     "batched_union_frontier",
     "beamer_use_pull",
@@ -193,6 +202,42 @@ __all__ = [
 ]
 
 State = Any
+
+
+# --------------------------------------------------------------------------
+# Error taxonomy: every guard in the dispatch raises a *named* subclass so
+# runtime errors and `repro.analysis` diagnostics share one vocabulary.
+# Both subclass ValueError, so pre-existing `except ValueError` /
+# `pytest.raises(ValueError)` call sites keep working unchanged.
+#
+# Static-analysis cross-reference (see README "Static analysis" and
+# ``repro.analysis.rules``): PolicyError guards are the runtime face of
+# semlint's policy checks (rule R3 flags the non-hashable-policy variant
+# before the cache silently degrades); ResidencyError guards are the
+# runtime face of rule R1 (O(m) residency contract) — `analyze()` reports
+# both pre-flight, before any edge data moves.
+# --------------------------------------------------------------------------
+class PolicyError(ValueError):
+    """An :class:`ExecutionPolicy` field value (or combination) is invalid.
+
+    Raised by policy validation and backend dispatch when the *policy
+    itself* is wrong — unknown backend/direction/tile_order names, bad
+    stream parameters.  Static counterpart: ``tools/semlint.py`` rule S2
+    (frozen-policy mutation) and ``repro.analysis`` rule R3 (policy
+    hashability, which the trace caches depend on).
+    """
+
+
+class ResidencyError(ValueError):
+    """The policy asks for a view/residency the graph does not have.
+
+    Raised when dispatch meets a graph missing the required edge view
+    (blocked tiles, in-CSR, tile order, semiring encoding) or when policy
+    residency contradicts where the edge store actually lives (host policy
+    on a device store and vice versa).  Static counterpart:
+    ``repro.analysis`` rules R1 (device-materialized O(m) avals under
+    ``residency='host'``) and R2 (host-sync inside the traced BSP body).
+    """
 
 
 # --------------------------------------------------------------------------
@@ -280,25 +325,25 @@ class ExecutionPolicy:
         from ..kernels.spmv.order import TILE_ORDERS
 
         if self.backend not in ("scan", "compact", "blocked", "blocked_compact"):
-            raise ValueError(f"unknown backend {self.backend!r}")
+            raise PolicyError(f"unknown backend {self.backend!r}")
         if self.direction not in ("out", "in", "auto"):
-            raise ValueError(f"unknown direction {self.direction!r}")
+            raise PolicyError(f"unknown direction {self.direction!r}")
         if self.tile_order not in TILE_ORDERS:
-            raise ValueError(
+            raise PolicyError(
                 f"unknown tile_order {self.tile_order!r}; expected one of "
                 f"{TILE_ORDERS}"
             )
         if self.residency not in ("device", "host"):
-            raise ValueError(
+            raise PolicyError(
                 f"unknown residency {self.residency!r}; expected 'device' "
                 "or 'host'"
             )
         if int(self.stream_buffer) < 1:
-            raise ValueError("stream_buffer must be >= 1")
+            raise PolicyError("stream_buffer must be >= 1")
         if int(self.stream_retries) < 0:
-            raise ValueError("stream_retries must be >= 0")
+            raise PolicyError("stream_retries must be >= 0")
         if float(self.stream_backoff_s) < 0:
-            raise ValueError("stream_backoff_s must be >= 0")
+            raise PolicyError("stream_backoff_s must be >= 0")
 
     def with_(self, **kw) -> "ExecutionPolicy":
         """A copy with the given fields replaced."""
@@ -384,7 +429,7 @@ def _select_blocked(sg: SemGraph, direction: str, reverse: bool):
         # ROWS of the transposed tiles, so activity masks destination-side
         # blocks of the reverse view (its row blocks).
         if sg.out_blocked_rev is None and sg.out_blocked is not None:
-            raise ValueError(
+            raise ResidencyError(
                 "reverse blocked view not built; use "
                 "device_graph(..., blocked=True, blocked_reverse=True)"
             )
@@ -393,7 +438,7 @@ def _select_blocked(sg: SemGraph, direction: str, reverse: bool):
         # pull: y[dst] (+)= x[src] gathering ALL sources; major = dst = the
         # rows of the forward tiles.
         if sg.in_degree is None:
-            raise ValueError(
+            raise ResidencyError(
                 "SemGraph has no in-edge view; pull ('in') blocked dispatch "
                 "needs a graph built with its in-CSR"
             )
@@ -410,7 +455,7 @@ def _check_blocked_semiring(sr: Semiring, tile_semiring: str,
     boolean = sr.name == "or_and"
     if boolean:
         if tile_semiring not in ("plus_times", "bool"):
-            raise ValueError(
+            raise ResidencyError(
                 "or_and requires 'plus_times' or 'bool' blocked tiles"
             )
         if tile_semiring == "plus_times" and weighted:
@@ -418,12 +463,12 @@ def _check_blocked_semiring(sr: Semiring, tile_semiring: str,
             # negative weight silently drop an edge from the y>0 threshold,
             # and binarizing here would re-copy the whole tile set every
             # superstep — require the 0/1 view built once up front instead.
-            raise ValueError(
+            raise ResidencyError(
                 "or_and on a weighted graph needs occupancy tiles; build "
                 "with device_graph(..., blocked_semiring='bool')"
             )
     elif sr.name != tile_semiring:
-        raise ValueError(
+        raise ResidencyError(
             f"semiring {sr.name!r} needs blocked tiles built with "
             f"semiring={sr.name!r} (have {tile_semiring!r})"
         )
@@ -504,7 +549,7 @@ def blocked_backend_spmv(
 
     bg, active_on, deg = _select_blocked(sg, direction, reverse)
     if bg is None:
-        raise ValueError(
+        raise ResidencyError(
             "SemGraph has no blocked views; build with "
             "device_graph(..., blocked=True)"
         )
@@ -585,10 +630,10 @@ def spmv(
             grid_bucket=chunk_cap if compact else None,
         )
     if backend not in ("scan", "compact"):
-        raise ValueError(f"unknown backend {backend!r}")
+        raise PolicyError(f"unknown backend {backend!r}")
     store = sg.out_store if direction == "out" else sg.in_store
     if store is None:
-        raise ValueError(f"SemGraph has no {direction!r} store")
+        raise ResidencyError(f"SemGraph has no {direction!r} store")
     if backend == "compact":
         cap = store.num_chunks if chunk_cap is None else chunk_cap
         return compact_spmv(store, x, active, sr, y_init=y_init,
@@ -635,13 +680,13 @@ def _multicast(sg, x, active, sr, *, direction, reverse, y_init, pol):
         # paths must stream the schedule the policy asked for.
         bg, active_on, _ = _select_blocked(sg, direction, reverse)
         if bg is None:
-            raise ValueError(
+            raise ResidencyError(
                 "SemGraph has no blocked views; build with "
                 "device_graph(..., blocked=True)"
             )
         have = getattr(bg, "tile_order", "dest")
         if have != pol.tile_order:
-            raise ValueError(
+            raise ResidencyError(
                 f"policy wants tile_order={pol.tile_order!r} but the "
                 f"graph's blocked view was built with {have!r}; rebuild "
                 "with device_graph(..., tile_order=...) or run through "
@@ -679,10 +724,10 @@ def _multicast(sg, x, active, sr, *, direction, reverse, y_init, pol):
         return jax.lax.cond(use_compact, compact_arm, dense_arm, None)
 
     if backend not in ("scan", "compact"):
-        raise ValueError(f"unknown backend {backend!r}")
+        raise PolicyError(f"unknown backend {backend!r}")
     store = sg.out_store if direction == "out" else sg.in_store
     if store is None:
-        raise ValueError(f"SemGraph has no {direction!r} store")
+        raise ResidencyError(f"SemGraph has no {direction!r} store")
     C = store.num_chunks
     cap = C if pol.chunk_cap is None else max(1, min(int(pol.chunk_cap), C))
     n_act_chunks = jnp.sum(chunk_activity(store, active).astype(jnp.int32))
@@ -890,7 +935,7 @@ def traverse(
     is_host = bool(getattr(sg, "is_host_view", False))
     if pol.residency == "host" or is_host:
         if not is_host:
-            raise ValueError(
+            raise ResidencyError(
                 "residency='host' policy met a device-resident graph: this "
                 "SemGraph's edge store already lives in device memory, so "
                 "streaming it from host would misreport residency.  Run "
@@ -898,7 +943,7 @@ def traverse(
                 "build a host view with repro.core.residency.host_graph()"
             )
         if pol.residency != "host":
-            raise ValueError(
+            raise ResidencyError(
                 "device-residency policy met a host-resident graph view: "
                 "its edge store has no device copy to dispatch on.  Use "
                 "ExecutionPolicy(residency='host') or build a device view "
@@ -918,7 +963,7 @@ def traverse(
     mode = pol.direction
     if mode != "out" and not _pull_available(sg, pol):
         if mode == "in":
-            raise ValueError(
+            raise ResidencyError(
                 "direction='in' needs the graph's pull views (in-store / "
                 "in_degree; blocked backends also need the forward tile "
                 "view) — build the graph with its in-CSR"

@@ -57,7 +57,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .engine import ExecutionPolicy, traverse
+from .engine import ExecutionPolicy, ResidencyError, traverse
 from .sem import IOStats, SemGraph
 from .semiring import PLUS_TIMES, Semiring
 
@@ -464,13 +464,13 @@ def run_program_batched(
     is_host = pol.residency == "host" or getattr(sg, "is_host_view", False)
     if is_host:
         if not getattr(sg, "is_host_view", False):
-            raise ValueError(
+            raise ResidencyError(
                 "residency='host' policy met a device-resident graph; run "
                 "through repro.Graph or build a host view with "
                 "repro.core.residency.host_graph()"
             )
         if pol.residency != "host":
-            raise ValueError(
+            raise ResidencyError(
                 "device-residency policy met a host-resident graph view; "
                 "use ExecutionPolicy(residency='host') or build a device "
                 "view with device_graph()"

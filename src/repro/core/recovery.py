@@ -302,13 +302,21 @@ def _segment_fn(sg, prog, pol):
         return _build_segment_fn(sg, prog, pol)
 
 
-def _build_segment_fn(sg, prog, pol):
-    """The device driver's superstep body, wrapped as a *segment*: the
-    same ``lax.while_loop`` with one extra ``it < stop`` conjunct in the
-    condition (``stop`` rides the carry).  Traced once into a jaxpr and
-    re-bound eagerly per segment — identical while-loop-body codegen to
-    the uninterrupted driver, at sub-millisecond re-dispatch
-    (cf. :func:`repro.core.residency._loopify`)."""
+def superstep_body(sg, prog, pol):
+    """THE BSP superstep as a carry -> carry function.
+
+    One place defines what a superstep is — frontier, gather, apply,
+    activate, IOStats accumulation, convergence test — and both consumers
+    trace exactly this function: :func:`_build_segment_fn` wraps it in the
+    segment ``lax.while_loop`` the device driver executes, and
+    :func:`repro.analysis.analyze` traces it into the jaxpr the static
+    rules walk.  That sharing is the analyzer's soundness argument: the
+    jaxpr it inspects IS the loop body that runs, not a re-derivation.
+
+    The carry is ``(state, io, it, done, stop)`` — the segment machinery's
+    layout (``done``/``stop`` ride the carry so the surrounding while-loop
+    condition can read them).
+    """
 
     def body(carry):
         state, io, it, _, stop = carry
@@ -322,6 +330,19 @@ def _build_segment_fn(sg, prog, pol):
         io = io._replace(supersteps=io.supersteps + 1)
         done = prog.converged(sg, state, activated)
         return state, io, it + 1, done, stop
+
+    return body
+
+
+def _build_segment_fn(sg, prog, pol):
+    """The device driver's superstep body, wrapped as a *segment*: the
+    same ``lax.while_loop`` with one extra ``it < stop`` conjunct in the
+    condition (``stop`` rides the carry).  Traced once into a jaxpr and
+    re-bound eagerly per segment — identical while-loop-body codegen to
+    the uninterrupted driver, at sub-millisecond re-dispatch
+    (cf. :func:`repro.core.residency._loopify`)."""
+
+    body = superstep_body(sg, prog, pol)
 
     def seg(state, io, it, done, stop):
         return jax.lax.while_loop(

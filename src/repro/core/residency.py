@@ -73,6 +73,8 @@ import numpy as np
 from ..graph.csr import Graph
 from .engine import (
     ExecutionPolicy,
+    PolicyError,
+    ResidencyError,
     _blocked_post,
     _blocked_pre_mask,
     _check_blocked_semiring,
@@ -567,7 +569,7 @@ def _host_select_blocked(hg: HostGraph, direction: str, reverse: bool):
         return True, "dst", hg.out_degree
     if direction == "in" and not reverse:
         if hg.in_degree is None:
-            raise ValueError(
+            raise ResidencyError(
                 "host graph has no in-edge view; pull ('in') blocked "
                 "dispatch needs a graph built with its in-CSR"
             )
@@ -601,7 +603,7 @@ def _stream_tiles(hg: HostGraph, x, active, sr: Semiring, *, direction: str,
     interpret = pol.interpret if pol.interpret is not None \
         else default_interpret()
     if not interpret and store.tile_order != "dest":
-        raise ValueError(
+        raise ResidencyError(
             f"tile_order={store.tile_order!r} is only supported in interpret "
             "mode for now (compiled TPU output-window revisits are "
             "unvalidated); use tile_order='dest' or interpret=True"
@@ -783,7 +785,7 @@ def _host_p2p(hg: HostGraph, x, active, sr: Semiring, *, direction: str,
         indptr, indices, w = host.indptr, host.indices, host.weights
     else:
         if host.in_indptr is None:
-            raise ValueError("host graph has no 'in' CSR view")
+            raise ResidencyError("host graph has no 'in' CSR view")
         indptr, indices, w = host.in_indptr, host.in_indices, host.in_weights
     if hg.m == 0:  # static: no edges, nothing to fetch
         y = sr.neutral_like(pad_state(x, sr), n) if y_init is None else y_init
@@ -857,10 +859,10 @@ def _host_multicast(hg, x, active, sr, *, direction, reverse, y_init, pol):
         return _stream_tiles(hg, x, active, sr, direction=direction,
                              reverse=reverse, y_init=y_init, pol=pol)
     if pol.backend not in ("scan", "compact"):
-        raise ValueError(f"unknown backend {pol.backend!r}")
+        raise PolicyError(f"unknown backend {pol.backend!r}")
     store = hg.out_store if direction == "out" else hg.in_store
     if store is None:
-        raise ValueError(f"host graph has no {direction!r} store")
+        raise ResidencyError(f"host graph has no {direction!r} store")
     return _stream_chunks(hg, store, x, active, sr, reverse=reverse,
                           y_init=y_init, pol=pol)
 
@@ -953,7 +955,7 @@ def host_traverse(
     mode = pol.direction
     if mode != "out" and not _host_pull_available(hg, pol):
         if mode == "in":
-            raise ValueError(
+            raise ResidencyError(
                 "direction='in' needs the graph's pull views (in-store / "
                 "in_degree; blocked backends also need the forward tile "
                 "view) — build the graph with its in-CSR"
@@ -1018,7 +1020,7 @@ def run_program_host(
     and ``retries`` included) follows because the accumulated ledger is
     part of the snapshot."""
     if not getattr(sg, "is_host_view", False):
-        raise ValueError(
+        raise ResidencyError(
             "residency='host' policy met a device-resident graph: this "
             "SemGraph's edge store already lives in device memory, so "
             "streaming it from host would misreport residency.  Run "
@@ -1028,7 +1030,7 @@ def run_program_host(
     pol = policy if policy is not None else prog.default_policy
     pol = pol if pol is not None else ExecutionPolicy()
     if pol.residency != "host":
-        raise ValueError(
+        raise ResidencyError(
             "device-residency policy met a host-resident graph view: its "
             "edge store has no device copy to dispatch on.  Use "
             "ExecutionPolicy(residency='host') or build a device view "

@@ -398,6 +398,7 @@ class Graph:
         max_supersteps: Optional[int] = None,
         checkpoint=None,
         resume: bool = False,
+        analyze: bool = False,
     ) -> ProgramResult:
         """Run any :class:`~repro.core.VertexProgram` on this graph.
 
@@ -416,8 +417,19 @@ class Graph:
         (superstep snapshots; ``resume=True`` continues a killed run,
         bitwise-equal to an uninterrupted one) — see
         :mod:`repro.core.recovery`.
+
+        ``analyze=True`` runs the static SEM contract checker
+        (:func:`repro.analysis.check`) over the program+policy pair
+        before any edge byte moves, raising
+        :class:`~repro.analysis.AnalysisError` on error-severity
+        findings.  The check is a one-time trace-level cost (cached per
+        graph/program/policy); it adds zero per-superstep work.
         """
         pol = policy if policy is not None else program.default_policy
+        if analyze:
+            from repro import analysis as _analysis
+            _analysis.check(self, program, pol, seeds=seeds,
+                            raise_on_error=True)
         sem = self._sem(pol, program)
         if batch is not None:
             res = run_program_batched(sem, program, policy, seeds=seeds,

@@ -1,0 +1,281 @@
+"""Tests for ``repro.analysis`` (the jaxpr SEM contract checker).
+
+Layout:
+
+* six *broken* fixture programs — one per rule R1..R6, each constructed
+  so that exactly its rule fires, with the finding's location pointing
+  back into this file;
+* a no-false-positive sweep: every built-in program stays clean across
+  4 backends x 2 residencies (this is the same zero-findings contract CI
+  gates via ``tools/semlint.py --analyze``);
+* ``Graph.run(analyze=True)`` wiring and the AST lint
+  (``tools/semlint.py``) smoke tests.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro import analysis
+from repro.analysis import AnalysisError
+from repro.core import MIN_PLUS, ExecutionPolicy
+from repro.core.semiring import Semiring
+from repro.graph.generators import rmat
+
+pytestmark = pytest.mark.analysis
+
+_THIS = os.path.abspath(__file__)
+_REPO = os.path.dirname(os.path.dirname(_THIS))
+
+HOST = ExecutionPolicy(residency="host", switch_fraction=None)
+
+
+@pytest.fixture(scope="module")
+def g():
+    return repro.Graph(rmat(7, edge_factor=8, seed=11, symmetrize=True),
+                       chunk_size=128)
+
+
+class WState(NamedTuple):
+    labels: jnp.ndarray
+    active: jnp.ndarray
+
+
+class GoodWCC(repro.VertexProgram):
+    """Min-label propagation; the known-clean baseline fixture."""
+
+    semiring = MIN_PLUS
+
+    def init(self, sg, seeds) -> WState:
+        return WState(labels=jnp.arange(sg.n, dtype=jnp.float32),
+                      active=jnp.ones(sg.n, bool))
+
+    def frontier(self, sg, s: WState) -> repro.Frontier:
+        return repro.Frontier(x=s.labels, active=s.active)
+
+    def apply(self, sg, s: WState, gathered):
+        labels = jnp.minimum(s.labels, gathered)
+        changed = labels < s.labels
+        return WState(labels, changed), changed
+
+
+# --------------------------------------------------------------------------
+# broken fixtures, one per rule
+# --------------------------------------------------------------------------
+class B1MaterializesEdges(GoodWCC):
+    """R1: materializes an O(m) array on device under residency='host'."""
+
+    def apply(self, sg, s: WState, gathered):
+        leak = jnp.zeros((sg.m,), jnp.float32)  # the O(m) device aval
+        labels = jnp.minimum(s.labels, gathered) + leak.sum() * 0.0
+        changed = labels < s.labels
+        return WState(labels, changed), changed
+
+
+class B2HostSync(GoodWCC):
+    """R2: concretizes a traced value inside the BSP body."""
+
+    def apply(self, sg, s: WState, gathered):
+        total = float(jnp.sum(gathered))  # ConcretizationTypeError
+        labels = jnp.minimum(s.labels, gathered + total * 0.0)
+        changed = labels < s.labels
+        return WState(labels, changed), changed
+
+
+class B3WeakDrift(GoodWCC):
+    """R3: init produces a weak-typed leaf, apply returns it strong."""
+
+    def init(self, sg, seeds) -> WState:
+        return WState(labels=jnp.full(sg.n, 1.0e9),  # weak f32
+                      active=jnp.ones(sg.n, bool))
+
+    def apply(self, sg, s: WState, gathered):
+        labels = jnp.minimum(s.labels, gathered).astype(jnp.float32)
+        changed = labels < s.labels
+        return WState(labels, changed), changed
+
+
+class B4LedgerLeak(GoodWCC):
+    """R4: an order-invariant IOStats field reads x_fetches."""
+
+    def gather(self, sg, s: WState, fr, policy):
+        gathered, st = super().gather(sg, s, fr, policy)
+        return gathered, st._replace(records=st.records + st.x_fetches)
+
+
+_BAD_SEMIRING = Semiring("bad_plus", combine="add", identity=1.0,
+                         edge_op=lambda xv, w: xv if w is None else xv * w)
+
+
+class B5UnlawfulSemiring(GoodWCC):
+    """R5: combine='add' with identity=1.0 (not neutral)."""
+
+    semiring = _BAD_SEMIRING
+
+
+class B6ConstantConverged(GoodWCC):
+    """R6: converged() ignores the carried state."""
+
+    def converged(self, sg, s: WState, activated):
+        return jnp.asarray(False)
+
+
+def _sole_finding(report, rule):
+    assert len(report.findings) == 1, report.render()
+    f = report.findings[0]
+    assert f.rule == rule, report.render()
+    return f
+
+
+def test_r1_residency_flags_om_materialization(g):
+    f = _sole_finding(analysis.check(g, B1MaterializesEdges(), HOST), "R1")
+    assert f.severity == "error"
+    assert "test_analysis.py" in f.location
+    assert "O(m)" in f.message
+
+
+def test_r2_concretization_names_hook_and_line(g):
+    f = _sole_finding(analysis.check(g, B2HostSync()), "R2")
+    assert f.severity == "error"
+    assert f.hook == "apply"
+    assert "test_analysis.py" in f.location
+
+
+def test_r3_weak_type_drift_is_a_warning(g):
+    f = _sole_finding(analysis.check(g, B3WeakDrift()), "R3")
+    assert f.severity == "warning"
+    assert "weak_type" in f.message
+    assert "test_analysis.py" in f.location
+
+
+def test_r4_ledger_taint(g):
+    f = _sole_finding(analysis.check(g, B4LedgerLeak()), "R4")
+    assert f.severity == "error"
+    assert "IOStats.records" in f.message
+    assert f.hook == "gather"
+    assert "test_analysis.py" in f.location
+
+
+def test_r5_identity_law(g):
+    f = _sole_finding(analysis.check(g, B5UnlawfulSemiring()), "R5")
+    assert f.severity == "error"
+    assert "not neutral" in f.message
+    assert "test_analysis.py" in f.location
+
+
+def test_r6_constant_converged(g):
+    f = _sole_finding(analysis.check(g, B6ConstantConverged()), "R6")
+    assert f.severity == "error"
+    assert f.hook == "converged"
+    assert "test_analysis.py" in f.location
+
+
+def test_r3_unhashable_program_config(g):
+    p = GoodWCC()
+    p.scratch = [1, 2, 3]  # a list attribute defeats the trace caches
+    rep = analysis.check(g, p)
+    assert any(f.rule == "R3" and "hashable" in f.message
+               for f in rep.findings), rep.render()
+
+
+# --------------------------------------------------------------------------
+# no-false-positive sweep: built-ins stay clean everywhere
+# --------------------------------------------------------------------------
+_BACKENDS = ["scan", "compact", "blocked", "blocked_compact"]
+
+
+def _policy(backend, residency):
+    kw = {"backend": backend}
+    if backend.startswith("blocked"):
+        kw["interpret"] = True
+    if residency == "host":
+        kw.update(residency="host", switch_fraction=None)
+    return ExecutionPolicy(**kw)
+
+
+@pytest.mark.parametrize("backend", _BACKENDS)
+@pytest.mark.parametrize("residency", ["device", "host"])
+def test_no_false_positives_builtin_sweep(g, backend, residency):
+    from repro.algs.bfs import BFSProgram
+    from repro.algs.coreness import CorenessProgram
+    from repro.algs.pagerank import PageRankPushProgram
+
+    pol = _policy(backend, residency)
+    for prog, seeds in [(BFSProgram(), [0, 3]),
+                        (PageRankPushProgram(), None),
+                        (CorenessProgram(), None),
+                        (GoodWCC(), None)]:
+        rep = analysis.check(g, prog, pol, seeds=seeds)
+        assert rep.ok, rep.render()
+        assert rep.mode == ("hooks" if residency == "host" else "body")
+
+
+# --------------------------------------------------------------------------
+# Graph.run(analyze=True) wiring
+# --------------------------------------------------------------------------
+def test_run_analyze_true_passes_clean_program(g):
+    res = g.run(GoodWCC(), analyze=True)
+    labels = np.asarray(res.state.labels)
+    assert labels.shape == (g.n,)
+
+
+def test_run_analyze_true_rejects_broken_program(g):
+    with pytest.raises(AnalysisError) as ei:
+        g.run(B6ConstantConverged(), analyze=True)
+    assert ei.value.report.findings[0].rule == "R6"
+    assert "R6" in str(ei.value)
+
+
+def test_warnings_do_not_block_run(g):
+    # B3's weak-type drift is warning severity: analyze=True reports it
+    # in the report but does not raise.
+    rep = analysis.check(g, B3WeakDrift())
+    assert rep.warnings and not rep.errors
+    res = g.run(B3WeakDrift(), analyze=True)
+    assert np.asarray(res.state.labels).shape == (g.n,)
+
+
+def test_analysis_cache_hits(g):
+    p = GoodWCC()
+    r1 = analysis.check(g, p)
+    r2 = analysis.check(g, p)
+    assert r1 is r2  # cached per (view, program config, policy, seeds)
+
+
+# --------------------------------------------------------------------------
+# tools/semlint.py (AST lint)
+# --------------------------------------------------------------------------
+_SEMLINT = os.path.join(_REPO, "tools", "semlint.py")
+
+
+def test_semlint_clean_on_src():
+    r = subprocess.run([sys.executable, _SEMLINT,
+                        os.path.join(_REPO, "src", "repro")],
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 finding(s)" in r.stdout
+
+
+def test_semlint_flags_broken_source(tmp_path):
+    bad = tmp_path / "bad_prog.py"
+    bad.write_text(textwrap.dedent("""
+        import numpy as np
+        class Bad:
+            def apply(self, sg, state, gathered):
+                total = float(gathered.sum())
+                arr = np.asarray(state)
+                return state, total
+        def tweak(pol):
+            pol.backend = "scan"
+    """))
+    r = subprocess.run([sys.executable, _SEMLINT, str(bad)],
+                       capture_output=True, text=True)
+    assert r.returncode == 3, r.stdout + r.stderr
+    assert r.stdout.count("S1") == 2
+    assert r.stdout.count("S2") == 1

@@ -1,0 +1,365 @@
+#!/usr/bin/env python
+"""semlint — source-level (AST) companion to ``repro.analysis``.
+
+The jaxpr analyzer (``repro.analysis.analyze``) sees what *traces*; this
+tool sees what *doesn't* — the source patterns that would blow up (or
+silently deoptimize) before a jaxpr ever exists.  Three rules:
+
+S1  traced-value concretization: ``int()`` / ``float()`` / ``bool()`` /
+    ``np.asarray()`` applied to a value derived from a traced argument
+    inside a VertexProgram hook (``frontier`` / ``gather`` / ``apply`` /
+    ``activate`` / ``converged``) or a ``lax.while_loop`` / ``lax.cond``
+    / ``lax.scan`` body.  These force a device sync per call under jit
+    (the runtime symptom is rule R2's ConcretizationTypeError); casts of
+    policy fields, graph dims, and literals are fine and exempt.
+
+S2  frozen-policy mutation: attribute assignment on an
+    ``ExecutionPolicy`` value (``pol.backend = ...``).  The policy is a
+    frozen dataclass used as a trace-cache key — mutating it raises
+    FrozenInstanceError at runtime and would silently defeat
+    ``_SEG_CACHE`` / ``_BATCH_CACHE`` if it didn't (rule R3's domain).
+
+S3  bare ``ValueError`` in engine dispatch: ``raise ValueError`` inside
+    ``src/repro/core/engine.py`` — dispatch errors must be the typed
+    subclasses ``PolicyError`` / ``ResidencyError`` so callers (and the
+    analyzer) can tell a bad knob from a missing view.
+
+Usage::
+
+    python tools/semlint.py [paths...]        # AST lint (default: src/repro)
+    python tools/semlint.py --analyze         # + run the jaxpr analyzer as a
+                                              #   zero-findings gate over every
+                                              #   built-in program and example
+
+Exit status is the number of findings (0 == clean), so CI can gate on it
+directly.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import sys
+from typing import List, Optional, Set, Tuple
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+HOOKS = ("frontier", "gather", "apply", "activate", "converged",
+         "converged_cols")
+# Hook parameters that carry *traced* values (everything else — self, sg,
+# pol/policy, seeds — is static at trace time).
+UNTRACED_PARAMS = {"self", "cls", "sg", "pol", "policy", "seeds"}
+CASTS = {"int", "float", "bool"}
+LOOP_FNS = {"while_loop", "cond", "scan", "fori_loop", "switch"}
+POLICY_NAMES = {"pol", "policy"}
+
+
+class Finding(Tuple[str, str, int, str]):
+    """(rule, file, line, message)"""
+
+
+def _find(rule: str, path: str, line: int, msg: str):
+    return (rule, path, line, msg)
+
+
+# --------------------------------------------------------------------------
+# S1: concretizing casts on traced values
+# --------------------------------------------------------------------------
+def _is_np_asarray(call: ast.Call) -> bool:
+    f = call.func
+    return (isinstance(f, ast.Attribute) and f.attr == "asarray"
+            and isinstance(f.value, ast.Name) and f.value.id in ("np",
+                                                                "numpy"))
+
+
+def _is_cast(call: ast.Call) -> Optional[str]:
+    f = call.func
+    if isinstance(f, ast.Name) and f.id in CASTS:
+        return f.id
+    if _is_np_asarray(call):
+        return "np.asarray"
+    return None
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+class _TracedScope(ast.NodeVisitor):
+    """Walk one traced scope (hook body or loop-body lambda/def): seed the
+    tainted-name set from the traced parameters, propagate through plain
+    assignments, and flag concretizing casts whose argument touches a
+    tainted name."""
+
+    def __init__(self, path: str, scope_name: str, tainted: Set[str],
+                 findings: List[tuple]):
+        self.path = path
+        self.scope = scope_name
+        self.tainted = set(tainted)
+        self.findings = findings
+        self.tracer_checked: Set[str] = set()
+
+    def _note_tracer_check(self, node: ast.Call):
+        """``isinstance(x, ...Tracer...)`` is the idiomatic eager/traced
+        split — a subsequent cast of ``x`` is deliberate, exempt it."""
+        f = node.func
+        if not (isinstance(f, ast.Name) and f.id == "isinstance"):
+            return
+        if len(node.args) != 2:
+            return
+        if "Tracer" not in ast.dump(node.args[1]):
+            return
+        self.tracer_checked |= _names_in(node.args[0])
+
+    def visit_Assign(self, node: ast.Assign):
+        self.generic_visit(node)
+        if _names_in(node.value) & self.tainted:
+            for t in node.targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        self.tainted.add(n.id)
+
+    def visit_Call(self, node: ast.Call):
+        self._note_tracer_check(node)
+        kind = _is_cast(node)
+        if kind is not None and node.args:
+            touched = (_names_in(node.args[0]) & self.tainted
+                       - self.tracer_checked)
+            if touched:
+                self.findings.append(_find(
+                    "S1", self.path, node.lineno,
+                    f"{kind}() on traced value "
+                    f"({', '.join(sorted(touched))}) in {self.scope} — "
+                    f"forces a host sync under jit; keep it a jnp array"))
+        self.generic_visit(node)
+
+    # nested defs get their own scope via the outer walker; don't descend
+    def visit_FunctionDef(self, node):  # noqa: N802
+        pass
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+
+def _traced_params(fn: ast.FunctionDef) -> Set[str]:
+    names = {a.arg for a in fn.args.args + fn.args.kwonlyargs}
+    return names - UNTRACED_PARAMS
+
+
+def _loop_body_args(call: ast.Call) -> List[ast.AST]:
+    """Function-valued arguments of a lax.while_loop/cond/scan call."""
+    f = call.func
+    name = f.attr if isinstance(f, ast.Attribute) else (
+        f.id if isinstance(f, ast.Name) else "")
+    if name not in LOOP_FNS:
+        return []
+    return [a for a in call.args
+            if isinstance(a, (ast.Lambda, ast.Name))]
+
+
+class _FileLint(ast.NodeVisitor):
+    def __init__(self, path: str, findings: List[tuple]):
+        self.path = path
+        self.findings = findings
+        self._loop_fns: Set[str] = set()
+        self._in_program_class = False
+
+    # ---- locate traced scopes -------------------------------------------
+    def visit_ClassDef(self, node: ast.ClassDef):
+        bases = {b.id if isinstance(b, ast.Name) else
+                 getattr(b, "attr", "") for b in node.bases}
+        is_prog = bool(bases & {"VertexProgram"}) or any(
+            isinstance(s, ast.FunctionDef) and s.name in ("apply",
+                                                          "converged")
+            for s in node.body)
+        prev = self._in_program_class
+        self._in_program_class = is_prog
+        self.generic_visit(node)
+        self._in_program_class = prev
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        if self._in_program_class and node.name in HOOKS:
+            scope = _TracedScope(self.path, f"hook {node.name}()",
+                                 _traced_params(node), self.findings)
+            for stmt in node.body:
+                scope.visit(stmt)
+        if node.name in self._loop_fns:
+            scope = _TracedScope(
+                self.path, f"loop body {node.name}()",
+                {a.arg for a in node.args.args}, self.findings)
+            for stmt in node.body:
+                scope.visit(stmt)
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Call(self, node: ast.Call):
+        for arg in _loop_body_args(node):
+            if isinstance(arg, ast.Lambda):
+                scope = _TracedScope(
+                    self.path, "lax loop lambda",
+                    {a.arg for a in arg.args.args}, self.findings)
+                scope.visit(arg.body)
+            elif isinstance(arg, ast.Name):
+                self._loop_fns.add(arg.id)
+        self.generic_visit(node)
+
+    # ---- S2: frozen-policy mutation -------------------------------------
+    def visit_Assign(self, node: ast.Assign):
+        for t in node.targets:
+            if (isinstance(t, ast.Attribute)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id in POLICY_NAMES):
+                self.findings.append(_find(
+                    "S2", self.path, node.lineno,
+                    f"mutation of frozen policy "
+                    f"`{t.value.id}.{t.attr}` — ExecutionPolicy is a "
+                    f"frozen trace-cache key; use dataclasses.replace()"))
+        self.generic_visit(node)
+
+    # ---- S3: bare ValueError in engine dispatch --------------------------
+    def visit_Raise(self, node: ast.Raise):
+        if self.path.replace("\\", "/").endswith("repro/core/engine.py"):
+            exc = node.exc
+            call = exc if isinstance(exc, ast.Call) else None
+            name = None
+            if call is not None and isinstance(call.func, ast.Name):
+                name = call.func.id
+            elif isinstance(exc, ast.Name):
+                name = exc.id
+            if name == "ValueError":
+                self.findings.append(_find(
+                    "S3", self.path, node.lineno,
+                    "bare ValueError in engine dispatch — raise "
+                    "PolicyError (bad knob) or ResidencyError (missing "
+                    "view) instead"))
+        self.generic_visit(node)
+
+
+def lint_file(path: str, findings: List[tuple]) -> None:
+    with open(path, "r", encoding="utf-8") as fh:
+        src = fh.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:  # pragma: no cover - lint input is our own src
+        findings.append(_find("S0", path, e.lineno or 0,
+                              f"syntax error: {e.msg}"))
+        return
+    # Two passes so loop-body functions referenced before their def (or
+    # after their use site) are still linted; dedupe what the second pass
+    # re-reports.
+    mine: List[tuple] = []
+    lint = _FileLint(path, mine)
+    lint.visit(tree)
+    if lint._loop_fns:
+        lint.visit(tree)
+    seen = set()
+    for f in mine:
+        if f not in seen:
+            seen.add(f)
+            findings.append(f)
+
+
+def iter_py(paths: List[str]):
+    for p in paths:
+        if os.path.isfile(p):
+            yield p
+        else:
+            for root, _dirs, files in os.walk(p):
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        yield os.path.join(root, f)
+
+
+# --------------------------------------------------------------------------
+# --analyze: jaxpr-analyzer zero-findings gate
+# --------------------------------------------------------------------------
+def run_analyzer_gate() -> int:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    import importlib.util
+
+    import jax.numpy as jnp
+
+    import repro
+    from repro import analysis
+    from repro.algs.betweenness import BCBackwardProgram, BCForwardProgram
+    from repro.algs.bfs import BFSProgram
+    from repro.algs.coreness import CorenessProgram
+    from repro.algs.pagerank import (PageRankPullProgram,
+                                     PageRankPushProgram,
+                                     PersonalizedPageRankProgram)
+    from repro.core import ExecutionPolicy
+    from repro.graph.generators import rmat
+
+    spec = importlib.util.spec_from_file_location(
+        "semlint_wcc_example",
+        os.path.join(REPO, "examples", "custom_program.py"))
+    wcc_mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(wcc_mod)
+
+    g = repro.Graph(rmat(8, edge_factor=16, seed=3, symmetrize=True),
+                    chunk_size=256)
+    srcs = jnp.asarray([0, 7], jnp.int32)
+    fwd = g.run(BCForwardProgram(), seeds=srcs)
+    max_level = jnp.max(jnp.where(fwd.state.dist < 0, -1, fwd.state.dist))
+    bwd_seeds = (fwd.state.sigma, fwd.state.dist, max_level)
+
+    progs = [
+        ("bfs", BFSProgram(), [0, 5]),
+        ("pr_push", PageRankPushProgram(), None),
+        ("pr_pull", PageRankPullProgram(), None),
+        ("coreness", CorenessProgram(), None),
+        ("bc_fwd", BCForwardProgram(), srcs),
+        ("bc_bwd", BCBackwardProgram(), bwd_seeds),
+        ("wcc", wcc_mod.WCCProgram(), None),
+        ("ppr", PersonalizedPageRankProgram(), [0, 3, 7]),
+    ]
+    pols = [
+        ("scan", ExecutionPolicy()),
+        ("compact", ExecutionPolicy(backend="compact")),
+        ("blocked", ExecutionPolicy(backend="blocked", interpret=True)),
+        ("scan_host", ExecutionPolicy(residency="host",
+                                      switch_fraction=None)),
+    ]
+    bad = 0
+    for polname, pol in pols:
+        for name, p, s in progs:
+            rep = analysis.check(g, p, pol, seeds=s)
+            status = "clean" if rep.ok else "FINDINGS"
+            print(f"analyze {polname:10s} {name:8s} mode={rep.mode:5s} "
+                  f"{status}")
+            if not rep.ok:
+                bad += len(rep.findings)
+                print(rep.render())
+    print(f"analyzer gate: {bad} finding(s) across "
+          f"{len(pols) * len(progs)} program x policy combos")
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*",
+                    default=[os.path.join(REPO, "src", "repro")])
+    ap.add_argument("--analyze", action="store_true",
+                    help="also run the jaxpr analyzer as a zero-findings "
+                         "gate over the built-in programs and examples")
+    args = ap.parse_args(argv)
+
+    findings: List[tuple] = []
+    nfiles = 0
+    for path in iter_py(args.paths):
+        nfiles += 1
+        lint_file(path, findings)
+
+    for rule, path, line, msg in findings:
+        rel = os.path.relpath(path, REPO)
+        print(f"{rule} {rel}:{line}: {msg}")
+    print(f"semlint: {len(findings)} finding(s) in {nfiles} file(s)")
+
+    total = len(findings)
+    if args.analyze:
+        total += run_analyzer_gate()
+    return min(total, 125)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
