@@ -150,6 +150,19 @@ CLAIMS = [
     ("recovery", "queue", "death_invariance_ok", lambda v: v == 1.0,
      "Lease queue: the merged multi-source sweep is bitwise-invariant to "
      "injected worker deaths"),
+    ("recovery", "chaos", "chaos_bitwise_parity", lambda v: v == 1.0,
+     "Durable queue: real OS workers, one SIGKILL'd + one stalled "
+     "mid-sweep, supervisor restarts — merged result bitwise the "
+     "crash-free single-process run"),
+    ("recovery", "snapshot", "delta_shrink_x", lambda v: v >= 2.0,
+     "Delta snapshots of slowly-changing BFS state store >=2x fewer "
+     "bytes than full snapshots, with bitwise resume-from-delta"),
+    ("recovery", "snapshot", "delta_resume_parity_ok", lambda v: v == 1.0,
+     "Resuming a delta snapshot chain after a mid-run kill is bitwise "
+     "the uninterrupted run"),
+    ("recovery", "snapshot", "stage_bound_ok", lambda v: v == 1.0,
+     "Streaming sharded saves never stage more than one "
+     "max_shard_bytes budget on host at once"),
     ("multisource", "batched", "parity_ok", lambda v: v == 1.0,
      "Serving: the Q=8 batched run is bitwise-equal to its 8 solo runs "
      "(values + per-query supersteps, both residencies)"),
@@ -351,7 +364,11 @@ def smoke(json_out: str | None = None) -> int:
     rrows, rsum = bench_recovery.measure(label="smoke_recovery")
     rows += rrows
     recovery_ok = (rsum["parity_ok"] == 1.0 and rsum["queue_ok"] == 1.0
-                   and rsum["sync_frac"] < 0.05)
+                   and rsum["sync_frac"] < 0.05
+                   and rsum["chaos_ok"] == 1.0
+                   and rsum["delta_ratio"] >= 2.0
+                   and rsum["delta_parity_ok"] == 1.0
+                   and rsum["stage_ok"] == 1.0)
 
     print_rows(rows)
     ok = (err < 1e-5 and bfs_ok and dens_ok and dir_ok and facade_ok
@@ -373,6 +390,13 @@ def smoke(json_out: str | None = None) -> int:
           f"checkpoint sync overhead {100 * rsum['sync_frac']:.2f}% "
           f"[wall ratio {rsum['overhead_x']:.3f}x], "
           f"queue death invariance {rsum['queue_ok'] == 1.0}, "
+          f"chaos bitwise parity {rsum['chaos_ok'] == 1.0} "
+          f"[{rsum['chaos_restarts']} restarts, "
+          f"{rsum['chaos_stale']} stale rejections, "
+          f"{rsum['chaos_vs_clean_x']:.2f}x vs clean], "
+          f"delta snapshots {rsum['delta_ratio']:.1f}x smaller "
+          f"[resume parity {rsum['delta_parity_ok'] == 1.0}, "
+          f"staging bound {rsum['stage_ok'] == 1.0}], "
           f"batched multisource parity {ms_ok}, "
           f"batched host amortization {amort_x:.1f}x)")
     if json_out:

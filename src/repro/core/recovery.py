@@ -48,6 +48,8 @@ from __future__ import annotations
 import collections
 import dataclasses
 import hashlib
+import os
+import signal
 import time
 from pathlib import Path
 from typing import Any, Optional
@@ -95,6 +97,15 @@ class CheckpointSpec:
         checkpoint I/O with the next supersteps — the SEM principle
         applied to the recovery tier.  The final (finished) snapshot is
         always written blocking.
+      max_shard_bytes: when set, snapshots stream out in fsync'd shards
+        of at most this many bytes each (peak staging memory bounded by
+        one shard, not by the O(n) state — see
+        ``checkpoint/store.save_checkpoint``).
+      delta: when True, snapshots skip state pieces whose content hash is
+        unchanged since the previous complete step, referencing the step
+        that physically stores them instead (slowly-changing states —
+        e.g. a BFS distance vector past its wavefront — shrink by the
+        unchanged fraction; retention keeps referenced steps alive).
       telemetry: optional mutable dict the driver fills with the
         checkpoint layer's *synchronous* cost — ``sync_s`` (seconds spent
         in snapshot/serialize/wait on the hot path) and ``saves`` (count).
@@ -108,6 +119,8 @@ class CheckpointSpec:
     every_k: int = 8
     keep: int = 3
     async_save: bool = True
+    max_shard_bytes: Optional[int] = None
+    delta: bool = False
     telemetry: Optional[dict] = dataclasses.field(
         default=None, compare=False, repr=False)
 
@@ -116,6 +129,8 @@ class CheckpointSpec:
             raise ValueError("every_k must be >= 1")
         if int(self.keep) < 1:
             raise ValueError("keep must be >= 1")
+        if self.max_shard_bytes is not None and int(self.max_shard_bytes) < 1:
+            raise ValueError("max_shard_bytes must be >= 1 (or None)")
 
     def child(self, name: str) -> "CheckpointSpec":
         """A sub-spec rooted at ``directory/name`` — multi-phase drivers
@@ -183,7 +198,10 @@ class _CheckpointCtx:
     def __init__(self, spec: CheckpointSpec, fp: dict):
         self.spec = spec
         self.fp = fp
-        self.mgr = CheckpointManager(spec.directory, keep=spec.keep)
+        self.mgr = CheckpointManager(
+            spec.directory, keep=spec.keep,
+            max_shard_bytes=spec.max_shard_bytes, delta=spec.delta,
+            telemetry=spec.telemetry)
         if spec.telemetry is not None:
             spec.telemetry.setdefault("sync_s", 0.0)
             spec.telemetry.setdefault("saves", 0)
@@ -251,9 +269,21 @@ class _CheckpointCtx:
 def maybe_fail(plan: Optional[FailurePlan], it: int) -> None:
     """Raise the injected :class:`DeviceFailure` scheduled for superstep
     ``it`` (fires once; the surviving plan is what the supervisor replays
-    with).  The shared injection point of both BSP drivers."""
-    if plan is not None and plan.pop(it) is not None:
-        raise DeviceFailure(f"injected at superstep {it}")
+    with).  The shared injection point of both BSP drivers.
+
+    Kind ``'sigkill'`` does not raise — it kills the *process* with an
+    uncatchable SIGKILL, exactly what an OOM kill or a ``kill -9`` does to
+    a real worker.  No unwind runs: whatever the checkpoint layer had not
+    yet published is lost, which is the failure mode the durable queue's
+    heartbeat/reap path and the chaos harness exist to survive."""
+    if plan is None:
+        return
+    kind = plan.pop(it)
+    if kind is None:
+        return
+    if kind == "sigkill":
+        os.kill(os.getpid(), signal.SIGKILL)
+    raise DeviceFailure(f"injected at superstep {it}")
 
 
 def _next_planned(plan: Optional[FailurePlan], it: int) -> Optional[int]:

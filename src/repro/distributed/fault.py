@@ -29,7 +29,8 @@ from typing import Any, Callable, Optional
 
 from ..checkpoint import CheckpointManager
 
-__all__ = ["DeviceFailure", "FailurePlan", "Supervisor", "SupervisorReport"]
+__all__ = ["ChaosReport", "DeviceFailure", "FailurePlan", "Supervisor",
+           "SupervisorReport", "supervise_workers"]
 
 
 class DeviceFailure(RuntimeError):
@@ -39,7 +40,15 @@ class DeviceFailure(RuntimeError):
 @dataclasses.dataclass
 class FailurePlan:
     """Injected events: {step: kind} with kind in 'crash' | 'crash_shrink'
-    | 'straggle'.  Each event fires once."""
+    | 'straggle' | 'sigkill'.  Each event fires once.
+
+    'crash'/'crash_shrink'/'straggle' raise/flag inside the process (the
+    unwind still runs — async checkpoint waits, context managers close).
+    'sigkill' (interpreted by ``recovery.maybe_fail``) kills the process
+    with an uncatchable signal — no unwind, no flush — modelling the OOM
+    killer / ``kill -9`` that multi-process fault tolerance must survive;
+    pair it with OS-level workers (``run_workers(processes=...)``) and
+    the :func:`supervise_workers` chaos harness."""
 
     events: dict
 
@@ -169,3 +178,112 @@ class Supervisor:
             return state, step
         except FileNotFoundError:
             return target, 0
+
+
+# --------------------------------------------------------------------------
+# multi-process chaos supervision (OS workers over the durable queue)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class ChaosReport:
+    """What a :func:`supervise_workers` pool lived through.
+
+    ``stale_rejections`` aggregates the workers' refused late commits —
+    the chaos gate asserts it is >0 under stall injection (proof the
+    token check actually fired, not that the race never happened);
+    ``kills`` counts abnormal child exits (SIGKILL shows as -9)."""
+
+    num_workers: int = 0
+    spawned: int = 0
+    restarts: int = 0
+    kills: int = 0
+    completed: int = 0
+    stale_rejections: int = 0
+    leases: int = 0
+    dead_letters: list = dataclasses.field(default_factory=list)
+    finished: bool = False
+    log: list = dataclasses.field(default_factory=list)
+
+
+def supervise_workers(
+    queue,
+    work_fn: Callable[[Any], Any],
+    *,
+    num_workers: int = 3,
+    faults: Optional[dict] = None,
+    poll: float = 0.05,
+    max_spawns: Optional[int] = None,
+    timeout: float = 300.0,
+) -> ChaosReport:
+    """Run ``num_workers`` real OS processes over a ``DurableWorkQueue``
+    and keep the pool at strength until the queue finishes: any child
+    that exits abnormally (SIGKILL'd by a fault injection, OOM-killed,
+    crashed) is replaced with a fresh worker, which resumes from the
+    filesystem state alone — the supervisor holds NO sweep progress.
+
+    Spawn context, not fork: a forked child inherits XLA's runtime
+    threads mid-flight; spawned workers re-import and rebuild their own
+    sessions from the picklable task payloads.
+
+    ``max_spawns`` bounds total process creation (default: enough for
+    every task to fail ``max_attempts`` times); ``timeout`` bounds the
+    whole run — on expiry the pool is terminated and the report says
+    ``finished=False`` rather than hanging a test suite forever.
+    """
+    import multiprocessing as mp
+
+    from ..core.workqueue import DurableWorkQueue, _durable_worker_main
+
+    if not isinstance(queue, DurableWorkQueue):
+        raise TypeError("supervise_workers needs a DurableWorkQueue")
+    ctx = mp.get_context("spawn")
+    cfg = {
+        "lease_timeout": queue.lease_timeout,
+        "max_attempts": queue.max_attempts,
+        "result_template": queue.result_template,
+    }
+    if max_spawns is None:
+        max_spawns = num_workers + queue.num_tasks * queue.max_attempts
+    rep = ChaosReport(num_workers=num_workers)
+
+    def spawn(wid: str):
+        p = ctx.Process(
+            target=_durable_worker_main,
+            args=(str(queue.root), queue.tasks, cfg, work_fn, wid,
+                  faults or {}, poll),
+            daemon=True,
+        )
+        p.start()
+        rep.spawned += 1
+        rep.log.append(f"spawned {wid} (pid {p.pid})")
+        return p
+
+    procs = {f"w{i}": spawn(f"w{i}") for i in range(num_workers)}
+    deadline = time.monotonic() + timeout
+    try:
+        while procs and time.monotonic() < deadline:
+            for wid, p in list(procs.items()):
+                p.join(timeout=poll)
+                if p.is_alive():
+                    continue
+                del procs[wid]
+                if p.exitcode != 0:
+                    rep.kills += 1
+                    rep.log.append(f"{wid} died (exit {p.exitcode})")
+                    if not queue.finished and rep.spawned < max_spawns:
+                        rep.restarts += 1
+                        nwid = f"{wid}r{rep.restarts}"
+                        procs[nwid] = spawn(nwid)
+                else:
+                    rep.log.append(f"{wid} exited clean")
+    finally:
+        for p in procs.values():
+            p.terminate()
+        for p in procs.values():
+            p.join(timeout=5.0)
+    rep.finished = queue.finished
+    rep.dead_letters = queue.dead_letters
+    for stats in queue.read_stats().values():
+        rep.completed += int(stats.get("completed", 0))
+        rep.stale_rejections += int(stats.get("stale", 0))
+        rep.leases += int(stats.get("leases", 0))
+    return rep

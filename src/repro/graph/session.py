@@ -415,8 +415,13 @@ class Graph:
 
         ``checkpoint=CheckpointSpec(dir)`` makes the run fault-tolerant
         (superstep snapshots; ``resume=True`` continues a killed run,
-        bitwise-equal to an uninterrupted one) — see
-        :mod:`repro.core.recovery`.
+        bitwise-equal to an uninterrupted one).  The spec's
+        ``max_shard_bytes=`` streams each snapshot in fsync'd shards
+        with peak host staging bounded by one shard, and ``delta=True``
+        stores only state pieces whose content changed since the
+        previous snapshot — both flow through every façade method and
+        the batched driver unchanged.  See :mod:`repro.core.recovery`
+        and :mod:`repro.checkpoint.store`.
 
         ``analyze=True`` runs the static SEM contract checker
         (:func:`repro.analysis.check`) over the program+policy pair

@@ -279,3 +279,23 @@ def test_semlint_flags_broken_source(tmp_path):
     assert r.returncode == 3, r.stdout + r.stderr
     assert r.stdout.count("S1") == 2
     assert r.stdout.count("S2") == 1
+
+
+def test_semlint_flags_clock_in_traced_scope(tmp_path):
+    # S4: wall-clock reads inside hook / loop bodies concretize per trace
+    bad = tmp_path / "bad_clock.py"
+    bad.write_text(textwrap.dedent("""
+        import time
+        from time import monotonic
+        class Bad:
+            def apply(self, sg, state, gathered):
+                stamp = time.time()
+                lease = monotonic() + 30.0
+                return state, stamp + lease
+        def fine():
+            return time.perf_counter()  # eager scope: allowed
+    """))
+    r = subprocess.run([sys.executable, _SEMLINT, str(bad)],
+                       capture_output=True, text=True)
+    assert r.returncode == 2, r.stdout + r.stderr
+    assert r.stdout.count("S4") == 2

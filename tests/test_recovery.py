@@ -423,3 +423,266 @@ class TestTelemetry:
         assert tele["sync_s"] > 0.0
         assert spec.child("fwd").telemetry is tele
         assert spec == CheckpointSpec(tmp_path / "t", every_k=2)
+
+
+# ------------------------------------------------------------ torn metadata
+class TestTornMetadata:
+    def test_latest_step_skips_torn_extra(self, tmp_path):
+        tree = {"a": jnp.arange(4)}
+        save_checkpoint(tmp_path, 2, tree, extra={"fp": "ok"})
+        save_checkpoint(tmp_path, 4, tree, extra={"fp": "ok"})
+        # a crash/bit-flip truncates step 4's metadata mid-write
+        (tmp_path / "step_00000004" / "extra.json").write_text('{"fp": "o')
+        assert latest_step(tmp_path) == 2  # skipped, not crashed on
+        restored, step = restore_checkpoint(tmp_path,
+                                            {"a": jnp.zeros(4, jnp.int32)})
+        assert step == 2
+
+    def test_load_extra_raises_typed_error_naming_step(self, tmp_path):
+        save_checkpoint(tmp_path, 7, {"a": jnp.zeros(1)}, extra={"x": 1})
+        (tmp_path / "step_00000007" / "extra.json").write_text("")
+        with pytest.raises(CheckpointCorruptionError, match="step 7"):
+            load_extra(tmp_path, 7)
+
+    def test_queue_resume_survives_torn_newest_snapshot(self, tmp_path):
+        """End to end: the newest queue snapshot's metadata is torn; the
+        resume scan falls back one step instead of crashing, and the
+        sweep still finishes with the canonical merge."""
+        shards = shard_sources(np.arange(23), 5)
+        full = run_workers(
+            WorkQueue(shards, result_template=np.zeros(16),
+                      clock=ManualClock()), _work).merge(lambda a, b: a + b)
+        q = WorkQueue(shards, result_template=np.zeros(16),
+                      clock=ManualClock())
+        for _ in range(3):
+            l = q.lease()
+            q.complete(l, _work(l.payload))
+            q.checkpoint(tmp_path, keep=5)
+        torn = tmp_path / "step_00000003" / "extra.json"
+        torn.write_text(torn.read_text()[:10])
+        q2 = WorkQueue(shards, result_template=np.zeros(16),
+                       clock=ManualClock())
+        assert q2.resume(tmp_path)
+        assert int(q2.completed.sum()) == 2  # one step of progress lost
+        run_workers(q2, _work)
+        assert np.array_equal(full, q2.merge(lambda a, b: a + b))
+
+
+# ------------------------------------------------------------ streaming store
+class TestStreamingStore:
+    def test_sharded_save_bounded_staging_bitwise_restore(self, tmp_path):
+        """State >> max_shard_bytes: many fsync'd shards, measured peak
+        staging <= one shard budget, restore bitwise across dtypes."""
+        rng = np.random.default_rng(0)
+        tree = {
+            "big": rng.standard_normal(16384).astype(np.float32),  # 64 KiB
+            "ints": np.arange(5000, dtype=np.int64),
+            "flags": rng.random(333) < 0.5,
+            "scalar": np.float64(1.25),
+        }
+        tel = {}
+        budget = 8192
+        save_checkpoint(tmp_path, 3, tree, max_shard_bytes=budget,
+                        telemetry=tel)
+        shards = sorted((tmp_path / "step_00000003").glob("shard_*.npz"))
+        assert len(shards) >= 8  # 64K floats alone need 8 shards
+        assert 0 < tel["stage_peak_bytes"] <= budget
+        assert tel["shard_files"] == len(shards)
+        restored, step = restore_checkpoint(tmp_path, tree, as_numpy=True)
+        assert step == 3
+        for k, v in tree.items():
+            assert np.array_equal(np.asarray(restored[k]), np.asarray(v)), k
+            assert np.asarray(restored[k]).dtype == np.asarray(v).dtype
+
+    def test_streaming_handles_jax_and_mldtype_leaves(self, tmp_path):
+        tree = {"bf": jnp.arange(3000, dtype=jnp.bfloat16),
+                "f": jnp.linspace(0, 1, 700)}
+        save_checkpoint(tmp_path, 1, tree, max_shard_bytes=1024)
+        restored, _ = restore_checkpoint(tmp_path, tree)
+        for k in tree:
+            assert restored[k].dtype == tree[k].dtype
+            assert np.array_equal(np.asarray(restored[k]),
+                                  np.asarray(tree[k])), k
+
+    def test_delta_skips_unchanged_pieces(self, tmp_path):
+        """Second snapshot of a mostly-unchanged state stores only the
+        changed pieces; restore resolves references to the base step."""
+        import json
+        tree = {"big": np.arange(8192, dtype=np.float32),
+                "tick": np.int64(0)}
+        save_checkpoint(tmp_path, 1, tree, max_shard_bytes=4096, delta=True)
+        full_bytes = json.loads(
+            (tmp_path / "step_00000001" / "manifest.json").read_text()
+        )["stored_bytes"]
+        tree2 = dict(tree)
+        tree2["tick"] = np.int64(1)  # only the odometer moved
+        save_checkpoint(tmp_path, 2, tree2, max_shard_bytes=4096, delta=True)
+        m2 = json.loads(
+            (tmp_path / "step_00000002" / "manifest.json").read_text())
+        assert m2["stored_bytes"] * 2 < full_bytes  # >=2x smaller
+        # pieces of the unchanged leaf reference step 1's physical copy
+        refs = {p["step"] for p in m2["leaves"][0]["pieces"]}
+        assert refs == {1}
+        restored, step = restore_checkpoint(tmp_path, tree2, as_numpy=True)
+        assert step == 2
+        assert np.array_equal(restored["big"], tree2["big"])
+        assert int(restored["tick"]) == 1
+
+    def test_delta_references_collapse_to_physical_home(self, tmp_path):
+        """A long delta chain never deepens: step k references the step
+        that STORES each piece, not step k-1 — restore is one hop."""
+        import json
+        tree = {"big": np.zeros(4096, np.float32), "t": np.int64(0)}
+        for s in range(1, 6):
+            tree = dict(tree, t=np.int64(s))
+            save_checkpoint(tmp_path, s, tree, delta=True)
+        m = json.loads(
+            (tmp_path / "step_00000005" / "manifest.json").read_text())
+        assert {p["step"] for p in m["leaves"][0]["pieces"]} == {1}
+        restored, _ = restore_checkpoint(tmp_path, tree, as_numpy=True)
+        assert int(restored["t"]) == 5
+
+    def test_gc_retains_delta_referenced_base(self, tmp_path):
+        """Retention keeps a step alive while newer snapshots reference
+        its shards — deleting it would orphan every delta above it."""
+        mgr = CheckpointManager(tmp_path, keep=2, delta=True,
+                                max_shard_bytes=4096)
+        tree = {"big": np.arange(4096, dtype=np.float32), "t": np.int64(0)}
+        for s in range(6):
+            mgr.save(s, dict(tree, t=np.int64(s)))
+        kept = sorted(p.name for p in tmp_path.iterdir()
+                      if p.name.startswith("step_"))
+        assert "step_00000000" in kept  # the physical home survives
+        restored, step = mgr.restore(tree)
+        assert step == 5
+        assert np.array_equal(np.asarray(restored["big"]), tree["big"])
+
+    def test_missing_referenced_shard_is_corruption_error(self, tmp_path):
+        tree = {"big": np.zeros(4096, np.float32), "t": np.int64(0)}
+        save_checkpoint(tmp_path, 1, tree, delta=True)
+        save_checkpoint(tmp_path, 2, dict(tree, t=np.int64(1)), delta=True)
+        shutil.rmtree(tmp_path / "step_00000001")  # deleted out of band
+        with pytest.raises(CheckpointCorruptionError, match="shard"):
+            restore_checkpoint(tmp_path, tree, 2)
+
+    def test_spec_threads_streaming_delta_through_driver(self, host,
+                                                         tmp_path):
+        """CheckpointSpec(max_shard_bytes, delta) reach the BSP driver's
+        snapshots, and kill-resume parity still holds bitwise."""
+        sem, _ = views(host)
+        prog = PageRankPullProgram(tol=1e-4)
+        base = run_program(sem, prog, max_supersteps=25)
+        res, rep = run_supervised(
+            sem, prog, max_supersteps=25,
+            checkpoint=CheckpointSpec(tmp_path / "d", every_k=3,
+                                      max_shard_bytes=2048, delta=True,
+                                      async_save=False),
+            plan=FailurePlan({7: "crash"}))
+        assert rep.restarts == 1
+        assert_identical(base, res)
+        import json
+        steps = sorted((tmp_path / "d").glob("step_*/manifest.json"))
+        assert steps, "driver produced no streaming snapshots"
+        m = json.loads(steps[-1].read_text())
+        assert m.get("format") == 2  # the streaming layout, not legacy
+
+    def test_spec_validates_shard_bytes(self, tmp_path):
+        with pytest.raises(ValueError):
+            CheckpointSpec(tmp_path, max_shard_bytes=0)
+
+
+# ------------------------------------------------- wall-clock lease expiry
+class TestWallClockExpiry:
+    def test_dead_worker_task_reissued_on_real_clock(self):
+        """The default-clock contract, no ManualClock: a worker that goes
+        silent past a real (tiny) lease_timeout loses its task to the
+        next lease(), and its late result is a stale token."""
+        import time as _time
+        q = WorkQueue(shard_sources(np.arange(6), 3),
+                      lease_timeout=0.1, result_template=np.zeros(16))
+        assert q._clock is _time.monotonic  # the documented default
+        l1 = q.lease()
+        assert (l1.tid, l1.attempt) == (0, 1)
+        _time.sleep(0.25)  # the worker is presumed dead
+        l2 = q.lease()
+        assert (l2.tid, l2.attempt) == (0, 2)  # re-issued, not stuck
+        assert q.complete(l2, _work(l2.payload))
+        assert not q.complete(l1, _work(l1.payload))  # late == stale
+        assert q.completed[0]
+
+    def test_late_complete_before_reap_still_commits(self):
+        """Lazy expiry: an expired-but-unreaped lease can still commit —
+        nothing observed the expiry, so the work is not wasted."""
+        import time as _time
+        q = WorkQueue(shard_sources(np.arange(3), 3),
+                      lease_timeout=0.05, result_template=np.zeros(16))
+        l1 = q.lease()
+        _time.sleep(0.1)  # expired on the wall clock, but nobody reaped
+        assert q.complete(l1, _work(l1.payload))
+
+
+# ------------------------------------------------- batched stream retry
+class TestBatchedStreamRetry:
+    def test_transient_faults_absorbed_bitwise_per_query(self, host):
+        """(n, Q) host-streamed run under transient stream faults: the
+        retries land in IOStats.retries and NOTHING else moves — values,
+        per-query supersteps, and every other ledger field are bitwise
+        the fault-free run's."""
+        from repro.core import run_program_batched
+
+        _, hv = views(host)
+        prog = BFSProgram()
+        pol = ExecutionPolicy(residency="host", stream_backoff_s=0.0)
+        seeds = jnp.asarray([0, 3, 11], jnp.int32)
+        base = run_program_batched(hv, prog, pol, seeds=seeds)
+        assert int(base.iostats.retries) == 0
+
+        calls = [0]
+
+        def flaky():  # two transient drops mid-sweep
+            calls[0] += 1
+            if calls[0] in (2, 4):
+                raise OSError("transient link drop")
+
+        with inject_stream_faults(flaky):
+            res = run_program_batched(hv, prog, pol, seeds=seeds)
+        assert int(res.iostats.retries) == 2
+        assert_identical(base, res, skip=("retries",))
+        assert np.array_equal(np.asarray(base.query_supersteps),
+                              np.asarray(res.query_supersteps))
+
+    def test_exhaustion_leaves_no_half_committed_checkpoint(self, host,
+                                                            tmp_path):
+        """StreamFailure after retry exhaustion mid-(n, Q) run: the
+        checkpoint directory holds only COMPLETE snapshots (or none), and
+        resuming from it converges to the bitwise fault-free result."""
+        from repro.core import run_program_batched
+
+        _, hv = views(host)
+        prog = BFSProgram()
+        seeds = jnp.asarray([0, 3, 11], jnp.int32)
+        pol = ExecutionPolicy(residency="host", stream_retries=1,
+                              stream_backoff_s=0.0)
+        base = run_program_batched(hv, prog, pol, seeds=seeds)
+
+        calls = [0]
+
+        def dies_later():  # healthy start, then the link goes down hard
+            calls[0] += 1
+            if calls[0] >= 3:
+                raise OSError("link down")
+
+        d = tmp_path / "b"
+        spec = CheckpointSpec(d, every_k=1, async_save=False)
+        with inject_stream_faults(dies_later):
+            with pytest.raises(StreamFailure):
+                run_program_batched(hv, prog, pol, seeds=seeds,
+                                    checkpoint=spec)
+        step = latest_step(d)
+        if step is not None:  # whatever was published must be restorable
+            assert load_extra(d, step) is not None
+        res = run_program_batched(hv, prog, pol, seeds=seeds,
+                                  checkpoint=spec, resume=True)
+        assert_identical(base, res, skip=("retries",))
+        assert np.array_equal(np.asarray(base.query_supersteps),
+                              np.asarray(res.query_supersteps))

@@ -3,7 +3,7 @@
 
 The jaxpr analyzer (``repro.analysis.analyze``) sees what *traces*; this
 tool sees what *doesn't* — the source patterns that would blow up (or
-silently deoptimize) before a jaxpr ever exists.  Three rules:
+silently deoptimize) before a jaxpr ever exists.  Four rules:
 
 S1  traced-value concretization: ``int()`` / ``float()`` / ``bool()`` /
     ``np.asarray()`` applied to a value derived from a traced argument
@@ -23,6 +23,15 @@ S3  bare ``ValueError`` in engine dispatch: ``raise ValueError`` inside
     ``src/repro/core/engine.py`` — dispatch errors must be the typed
     subclasses ``PolicyError`` / ``ResidencyError`` so callers (and the
     analyzer) can tell a bad knob from a missing view.
+
+S4  wall-clock reads in traced scopes: ``time.time()`` /
+    ``time.monotonic()`` / ``time.perf_counter()`` (and their ``_ns``
+    variants) inside a hook or loop body.  A clock call concretizes *per
+    trace*, not per superstep — the compiled loop bakes in whatever the
+    clock read during tracing, so lease expiries and telemetry stamps
+    computed there are silently frozen (the R2 bug class in clock form).
+    Clocks belong in the eager drivers (workqueue, checkpoint telemetry),
+    never in traced bodies.
 
 Usage::
 
@@ -52,6 +61,20 @@ UNTRACED_PARAMS = {"self", "cls", "sg", "pol", "policy", "seeds"}
 CASTS = {"int", "float", "bool"}
 LOOP_FNS = {"while_loop", "cond", "scan", "fori_loop", "switch"}
 POLICY_NAMES = {"pol", "policy"}
+CLOCK_FNS = {"time", "monotonic", "perf_counter", "time_ns",
+             "monotonic_ns", "perf_counter_ns"}
+
+
+def _is_clock_call(call: ast.Call) -> Optional[str]:
+    """``time.<clock>()`` or a bare from-imported ``monotonic()`` etc.
+    (bare ``time()`` alone is too ambiguous to flag)."""
+    f = call.func
+    if (isinstance(f, ast.Attribute) and f.attr in CLOCK_FNS
+            and isinstance(f.value, ast.Name) and f.value.id == "time"):
+        return f"time.{f.attr}"
+    if isinstance(f, ast.Name) and f.id in CLOCK_FNS - {"time"}:
+        return f.id
+    return None
 
 
 class Finding(Tuple[str, str, int, str]):
@@ -121,6 +144,13 @@ class _TracedScope(ast.NodeVisitor):
 
     def visit_Call(self, node: ast.Call):
         self._note_tracer_check(node)
+        clock = _is_clock_call(node)
+        if clock is not None:
+            self.findings.append(_find(
+                "S4", self.path, node.lineno,
+                f"{clock}() in {self.scope} — a traced body's clock read "
+                f"concretizes once per TRACE, not per superstep; move "
+                f"timing/leases to the eager driver"))
         kind = _is_cast(node)
         if kind is not None and node.args:
             touched = (_names_in(node.args[0]) & self.tainted
